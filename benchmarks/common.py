@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: timed jit calls + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` (jit-compiled, blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class CSV:
+    """Accumulates ``name,us_per_call,derived`` rows for run.py."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str = "") -> None:
+        self.rows.append((name, seconds * 1e6, derived))
+        print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle vs the fused
+XLA path, at the paper's hot-spot shapes.  On this CPU container the Pallas
+timings exercise interpret mode (correctness path) — the recorded numbers
+for real-TPU projection come from the dry-run roofline, not wall clock; the
+jnp-vs-jnp rows (similarity build, probe+verify fused vs unfused) are
+meaningful relative measurements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import cosine_vs_all, row_norms
+from repro.kernels.similarity.ref import similarity_ref
+from benchmarks.common import CSV, time_call
+
+
+def main(csv: CSV | None = None) -> None:
+    csv = csv or CSV()
+    rng = np.random.default_rng(0)
+    # MovieLens-scale traditional path: 30 new users vs all 943
+    Q = jnp.asarray(rng.normal(size=(30, 1682)).astype(np.float32))
+    R = jnp.asarray(rng.normal(size=(943, 1682)).astype(np.float32))
+    qn, rn = jnp.linalg.norm(Q, axis=1), jnp.linalg.norm(R, axis=1)
+
+    ref = jax.jit(similarity_ref)
+    t = time_call(ref, Q, R, qn, rn)
+    csv.add("kernel_similarity_ml_jnp", t, "30x943x1682")
+
+    # Douban-sub scale matvec (one user, the per-user traditional cost)
+    R2 = jnp.asarray(rng.normal(size=(8093, 3658)).astype(np.float32))
+    n2 = row_norms(R2)
+    r0 = R2[5]
+    f = jax.jit(cosine_vs_all)
+    t = time_call(f, R2, n2, r0)
+    csv.add("kernel_cosine_vs_all_douban16", t, "8093x3658")
+
+    # probe+verify (the TwinSearch per-user cost at the same scale)
+    from repro.core import build_state, twinsearch_find, set0_cap
+    state = jax.jit(lambda R: build_state(R, capacity_extra=1))(R2[:2048])
+    probes = jnp.arange(8, dtype=jnp.int32)
+    g = jax.jit(lambda s, r, p: twinsearch_find(
+        s, r, p, s_max=set0_cap(2048), n_base=2048, k_cap=0).found)
+    t = time_call(g, state, R2[5], probes)
+    csv.add("kernel_twinsearch_find_2048", t, "c=8")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    main(c)

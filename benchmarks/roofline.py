@@ -1,0 +1,74 @@
+"""Roofline report generator: reads the dry-run JSONL and renders the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def load(path: str) -> "OrderedDict[tuple, dict]":
+    recs: OrderedDict[tuple, dict] = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return recs
+
+
+def _ms(x: float) -> str:
+    return f"{x * 1e3:.2f}"
+
+
+def render(recs: dict, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute(ms) | t_memory(ms) | t_coll(ms) | "
+        "dominant | useful | args/dev | temp/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in recs.items():
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | "
+                         f"— | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+            continue
+        ro, me = r["roofline"], r["memory"]
+        gb = 1 / (1 << 30)
+        lines.append(
+            f"| {arch} | {shape} | {_ms(ro['t_compute_s'])} | "
+            f"{_ms(ro['t_memory_s'])} | {_ms(ro['t_collective_s'])} | "
+            f"{ro['dominant']} | {ro['useful_fraction']:.2f} | "
+            f"{me['argument_bytes'] * gb:.2f}GB | "
+            f"{me['temp_bytes'] * gb:.2f}GB |")
+    return "\n".join(lines)
+
+
+def summary(recs: dict) -> str:
+    n_ok = sum(r["status"] == "ok" for r in recs.values())
+    n_skip = sum(r["status"] == "skipped" for r in recs.values())
+    n_err = sum(r["status"] == "error" for r in recs.values())
+    doms: dict[str, int] = {}
+    for r in recs.values():
+        if r["status"] == "ok":
+            d = r["roofline"]["dominant"]
+            doms[d] = doms.get(d, 0) + 1
+    return (f"cells ok={n_ok} skipped={n_skip} errors={n_err}; "
+            f"dominant-term histogram: {doms}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.inp)
+    print(summary(recs))
+    print(render(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

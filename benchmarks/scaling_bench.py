@@ -1,0 +1,68 @@
+"""Paper Sec 3.2 complexity model: total onboarding cost vs k should follow
+O((1 + (k-1)/125)·m·n) for TwinSearch against O(k·m·n) traditional — i.e.
+the TwinSearch curve is nearly flat in k while the traditional curve is
+linear.  Sweeps k and n at fixed density and reports the fitted
+incremental-cost ratio (paper model: 1/125)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_state, make_probes, set0_cap
+from repro.core.baseline import onboard_batch_traditional
+from repro.core.twinsearch import onboard_batch_buffered
+from repro.data import synth_ratings
+from benchmarks.common import CSV, time_call
+
+
+def _pair(R: np.ndarray, k: int, seed: int = 0) -> tuple[float, float]:
+    n, m = R.shape
+    Rj = jnp.asarray(R, jnp.float32)
+    s_max = set0_cap(n)
+    st_tw = jax.jit(lambda R: build_state(R, capacity_extra=0))(Rj)
+    st_tr = jax.jit(lambda R: build_state(R, capacity_extra=k))(Rj)
+    R_new = jnp.asarray(np.tile(R[n // 5].astype(np.float32), (k, 1)))
+    probes = make_probes(jax.random.PRNGKey(seed), k, 8, n)
+    tw = jax.jit(lambda s, rn, pr: onboard_batch_buffered(
+        s, rn, pr, s_max=s_max)[0])
+    tr = jax.jit(lambda s, rn: onboard_batch_traditional(
+        s, rn).sim_vals[-rn.shape[0]:])   # return rows: defeat DCE
+    return (time_call(tw, st_tw, R_new, probes),
+            time_call(tr, st_tr, R_new))
+
+
+def main(csv: CSV | None = None) -> None:
+    csv = csv or CSV()
+    n, m = 2048, 512
+    R = synth_ratings(0, n, m, n * 40)
+
+    ks = (1, 4, 8, 16, 32)
+    tws, trs = [], []
+    for k in ks:
+        t_tw, t_tr = _pair(R, k)
+        tws.append(t_tw)
+        trs.append(t_tr)
+        csv.add(f"scaling_k{k}_twinsearch", t_tw,
+                f"traditional_us={t_tr*1e6:.0f};"
+                f"speedup={t_tr/max(t_tw,1e-12):.1f}x")
+
+    k_arr = np.asarray(ks, float)
+    # incremental cost per extra user, each method
+    slope_tw = max(np.polyfit(k_arr, tws, 1)[0], 1e-12)
+    slope_tr = max(np.polyfit(k_arr, trs, 1)[0], 1e-12)
+    csv.add("scaling_incremental_ratio", slope_tw / slope_tr,
+            "paper_model=1/125=0.008")
+
+    for n2 in (1024, 4096):
+        R2 = synth_ratings(1, n2, m, n2 * 40)
+        t_tw, t_tr = _pair(R2, 8, seed=n2)
+        csv.add(f"scaling_n{n2}", t_tw,
+                f"speedup={t_tr/max(t_tw,1e-12):.1f}x")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    main(c)

@@ -1,0 +1,80 @@
+"""Paper Figures 2-5: running time of TwinSearch vs the traditional method
+for k identical new users, user-based and item-based CF, on MovieLens-scale
+and Douban-scale data.
+
+MovieLens runs at the full published scale (943 x 1682).  Douban
+(129,490 x 58,541) exceeds this container's single-core time budget for
+*timed* runs, so it runs at a 1/32-per-axis subsample with the full-scale
+cost reported as ``derived`` via exact cost scaling (the traditional path
+is a dense n·m matvec per user; TwinSearch's dominant terms scale with n).
+The full-scale Douban cells are also covered FLOP-exactly by the dry-run
+rows ``twinsearch-cf/douban_*`` in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_state, make_probes, set0_cap
+from repro.core.baseline import onboard_batch_traditional
+from repro.core.twinsearch import onboard_batch_buffered
+from repro.data import douban_film, movielens_100k
+from benchmarks.common import CSV, time_call
+
+K_SWEEP = (1, 5, 10, 20, 30)
+DOUBAN_SUB = 1 / 32
+
+
+def _bench_dataset(csv: CSV, name: str, R: np.ndarray, mode: str,
+                   scale_note: tuple | None = None) -> None:
+    if mode == "item":
+        R = R.T.copy()
+    n, m = R.shape
+    k_max = max(K_SWEEP)
+    s_max = set0_cap(n)
+    Rj = jnp.asarray(R, jnp.float32)
+    state_tw = jax.jit(lambda R: build_state(R, capacity_extra=0))(Rj)
+    state_tr = jax.jit(
+        lambda R: build_state(R, capacity_extra=k_max))(Rj)
+    r0 = R[n // 3].astype(np.float32)
+
+    tw = jax.jit(lambda s, rn, pr: onboard_batch_buffered(
+        s, rn, pr, s_max=s_max)[0])
+    trad = jax.jit(lambda s, rn: onboard_batch_traditional(
+        s, rn).sim_vals[-rn.shape[0]:])   # return rows: defeat DCE
+    for k in K_SWEEP:
+        R_new = jnp.asarray(np.tile(r0, (k, 1)), jnp.float32)
+        probes = make_probes(jax.random.PRNGKey(k), k, 8, n)
+        t_tw = time_call(tw, state_tw, R_new, probes)
+        t_tr = time_call(trad, state_tr, R_new)
+        derived = f"speedup={t_tr / max(t_tw, 1e-9):.1f}x"
+        if scale_note is not None:
+            full_n, full_m = scale_note
+            factor = (full_n / n) * (full_m / m)
+            derived += (f";full_scale_traditional_s={t_tr * factor:.1f}"
+                        f";full_scale_twinsearch_s="
+                        f"{t_tw * (full_n / n):.2f}")
+        csv.add(f"fig_{name}_{mode}_k{k}_twinsearch", t_tw, derived)
+        csv.add(f"fig_{name}_{mode}_k{k}_traditional", t_tr, "")
+
+
+def main(csv: CSV | None = None) -> None:
+    csv = csv or CSV()
+    ml = movielens_100k(seed=0)
+    # Fig 2 / Fig 4: MovieLens, user- and item-based (full published scale)
+    _bench_dataset(csv, "ml", ml, "user")
+    _bench_dataset(csv, "ml", ml, "item")
+    # Fig 3 / Fig 5: Douban film at 1/32 subsample per axis
+    db = douban_film(seed=0, subsample=DOUBAN_SUB)
+    _bench_dataset(csv, "douban", db, "user",
+                   scale_note=(129_490, 58_541))
+    _bench_dataset(csv, "douban", db, "item",
+                   scale_note=(58_541, 129_490))
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    main(c)

@@ -1,0 +1,53 @@
+"""Quickstart: neighbourhood CF with TwinSearch new-user onboarding.
+
+Builds a MovieLens-100k-scale system, onboards a burst of identical new
+users (the paper's special case / kNN-attack scenario), and shows the
+TwinSearch fast path against the traditional rebuild.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+from repro.data import movielens_100k, plant_twins
+from repro.serving import CFServer
+
+def main() -> None:
+    print("== building MovieLens-scale CF system (943 users x 1682 films)")
+    R = movielens_100k(seed=0)
+    t0 = time.perf_counter()
+    srv = CFServer(R, capacity_extra=32, c_probes=8)
+    print(f"   full similarity build: {time.perf_counter() - t0:.2f}s")
+
+    print("== kNN-attack burst: 10 identical new users (>=8 ratings)")
+    burst = plant_twins(R, 10, source_user=None, seed=7)
+    for i in range(10):
+        uid, info = srv.onboard_user(burst[i])
+        path = "TwinSearch copy" if info["twin_found"] else "full build"
+        print(f"   user {uid}: {path:15s} {info['ms']:7.1f}ms")
+    s = srv.stats.summary()
+    print(f"   twin hits: {s['twin_hits']}/10, fallbacks {s['fallbacks']}, "
+          f"p50 {s['onboard_p50_ms']:.1f}ms")
+
+    print("== the copied lists serve recommendations immediately")
+    recs = srv.recommend(943, n=5)           # first onboarded user
+    print("   top-5 films for new user 943:",
+          [f"#{i}({s:.2f})" for i, s in recs])
+
+    print("== baseline comparison: same burst, traditional path only")
+    srv2 = CFServer(R, capacity_extra=32)
+    for i in range(10):
+        srv2.onboard_user(burst[i], use_twinsearch=False)
+    med = lambda xs: sorted(xs)[len(xs) // 2]            # noqa: E731
+    # steady-state medians (first call on each path pays jit compile)
+    t_tw = med(srv.stats.onboard_ms[1:])
+    t_tr = med(srv2.stats.onboard_ms[1:])
+    print(f"   per-user p50: traditional {t_tr:.1f}ms vs twinsearch "
+          f"{t_tw:.1f}ms ({t_tr / max(t_tw, 1e-9):.1f}x)")
+    print("   (MovieLens is small — the gap grows with n·m; see "
+          "benchmarks/ for the Douban-scale and dry-run numbers)")
+
+
+if __name__ == "__main__":
+    main()

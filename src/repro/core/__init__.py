@@ -1,0 +1,28 @@
+"""The paper's contribution: TwinSearch new-user onboarding for
+neighbourhood-based collaborative filtering, plus the CF substrate it lives
+in (similarity measures, sorted lists, kNN prediction, incremental updates,
+list maintenance)."""
+from repro.core.types import (CFState, OnboardStats, TwinResult, SENTINEL,
+                              SENTINEL_GATE, active_mask, set0_cap)
+from repro.core.similarity import (cosine_matrix, cosine_vs_all,
+                                   pearson_matrix, adjusted_cosine_matrix,
+                                   similarity_matrix, row_norms)
+from repro.core.knn import (build_state, sort_rows, top_k_neighbors, predict,
+                            recommend)
+from repro.core.baseline import (build_list, append_user, onboard_traditional,
+                                 onboard_batch_traditional)
+from repro.core.twinsearch import (twinsearch_find, onboard_twinsearch,
+                                   onboard_batch, make_probes, probe_sims,
+                                   candidate_mask, verify_candidates)
+from repro.core.maintenance import insert_into_lists, splice_twin
+
+__all__ = [
+    "CFState", "OnboardStats", "TwinResult", "SENTINEL", "SENTINEL_GATE",
+    "active_mask", "set0_cap", "cosine_matrix", "cosine_vs_all",
+    "pearson_matrix", "adjusted_cosine_matrix", "similarity_matrix",
+    "row_norms", "build_state", "sort_rows", "top_k_neighbors", "predict",
+    "recommend", "build_list", "append_user", "onboard_traditional",
+    "onboard_batch_traditional", "twinsearch_find", "onboard_twinsearch",
+    "onboard_batch", "make_probes", "probe_sims", "candidate_mask",
+    "verify_candidates", "insert_into_lists", "splice_twin",
+]

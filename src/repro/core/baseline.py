@@ -1,0 +1,59 @@
+"""Traditional new-user similarity-list construction (the paper's baseline).
+
+For a new user u0: compute sim(u0, x) for every active user x — O(n m) — and
+sort — O(n log n).  This is the path TwinSearch displaces; it is also
+TwinSearch's fallback when no twin verifies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CFState, SENTINEL, active_mask
+from repro.core.similarity import cosine_vs_all
+
+
+def build_list(state: CFState, r0: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Similarity list of a new user vs the whole active system.
+
+    Returns (vals_sorted_asc, idx_sorted, sims_unsorted) padded to capacity
+    with SENTINEL for inactive slots.  ``sims_unsorted`` feeds the optional
+    list-maintenance op (inserting u0 into existing users' lists)."""
+    sims = cosine_vs_all(state.ratings, state.norms, r0)
+    sims = jnp.where(active_mask(state), sims, SENTINEL)
+    idx = jnp.argsort(sims).astype(jnp.int32)
+    vals = jnp.take_along_axis(sims, idx, axis=-1)
+    return vals, idx, sims
+
+
+def append_user(state: CFState, r0: jax.Array, vals: jax.Array,
+                idx: jax.Array) -> CFState:
+    """Write the new user into the next capacity slot (static shapes)."""
+    slot = state.n_active
+    r0f = r0.astype(state.ratings.dtype)
+    return CFState(
+        ratings=jax.lax.dynamic_update_index_in_dim(
+            state.ratings, r0f, slot, axis=0),
+        norms=state.norms.at[slot].set(jnp.linalg.norm(
+            r0.astype(jnp.float32))),
+        sim_vals=jax.lax.dynamic_update_index_in_dim(
+            state.sim_vals, vals.astype(state.sim_vals.dtype), slot, axis=0),
+        sim_idx=jax.lax.dynamic_update_index_in_dim(
+            state.sim_idx, idx.astype(jnp.int32), slot, axis=0),
+        n_active=state.n_active + 1,
+    )
+
+
+def onboard_traditional(state: CFState, r0: jax.Array) -> CFState:
+    """One new user through the traditional path (compute-all + sort)."""
+    vals, idx, _ = build_list(state, r0)
+    return append_user(state, r0, vals, idx)
+
+
+def onboard_batch_traditional(state: CFState, R_new: jax.Array) -> CFState:
+    """k new users, each via the traditional path — the paper's O(k n m)."""
+    def step(st, r0):
+        return onboard_traditional(st, r0), ()
+    state, _ = jax.lax.scan(step, state, R_new)
+    return state

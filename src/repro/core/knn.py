@@ -1,0 +1,87 @@
+"""Sorted similarity lists + kNN rating prediction.
+
+The per-user sorted similarity list is the core data structure of
+neighbourhood CF (and of the paper's algorithm, which binary-searches it).
+Lists are stored ascending so ``jnp.searchsorted`` applies directly; the
+"top" of a list is its tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CFState, SENTINEL, SENTINEL_GATE, active_mask
+from repro.core.similarity import row_norms, similarity_matrix
+
+
+def sort_rows(S: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort each row ascending; returns (vals, idx) with idx int32."""
+    idx = jnp.argsort(S, axis=-1).astype(jnp.int32)
+    vals = jnp.take_along_axis(S, idx, axis=-1)
+    return vals, idx
+
+
+def build_state(R: jax.Array, *, capacity_extra: int = 0,
+                measure: str = "cosine") -> CFState:
+    """Full similarity build: the traditional O(n^2 m) path, producing the
+    sorted lists the system maintains thereafter.  ``capacity_extra``
+    preallocates slots for onboarding bursts."""
+    n, m = R.shape
+    N = n + capacity_extra
+    Rf = R.astype(jnp.float32)
+    S = similarity_matrix(Rf, measure)
+
+    if capacity_extra:
+        pad = jnp.full((n, capacity_extra), SENTINEL, S.dtype)
+        S = jnp.concatenate([S, pad], axis=1)
+        S = jnp.concatenate([S, jnp.full((capacity_extra, N), SENTINEL,
+                                         S.dtype)], axis=0)
+        Rf = jnp.concatenate([Rf, jnp.zeros((capacity_extra, m), Rf.dtype)],
+                             axis=0)
+    vals, idx = sort_rows(S)
+    return CFState(
+        ratings=Rf,
+        norms=row_norms(Rf),
+        sim_vals=vals,
+        sim_idx=idx,
+        n_active=jnp.asarray(n, jnp.int32),
+    )
+
+
+def top_k_neighbors(state: CFState, user: jax.Array, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(k,) highest-similarity neighbours of ``user`` (excluding self),
+    from the sorted list tail."""
+    vals = state.sim_vals[user]
+    idx = state.sim_idx[user]
+    not_self = idx != user
+    ranked = jnp.where(not_self & (vals > SENTINEL_GATE), vals, SENTINEL)
+    top_vals, pos = jax.lax.top_k(ranked, k)
+    return top_vals, idx[pos]
+
+
+def predict(state: CFState, user: jax.Array, item: jax.Array, k: int = 20
+            ) -> jax.Array:
+    """kNN weighted-average rating prediction r̂(u, i) =
+    Σ_v sim(u,v)·r(v,i) / Σ_v |sim(u,v)| over the top-k neighbours of u that
+    rated i."""
+    sims, nbrs = top_k_neighbors(state, user, k)
+    r = state.ratings[nbrs, item]
+    w = jnp.where((r != 0) & (sims > 0), sims, 0.0)
+    denom = jnp.sum(jnp.abs(w))
+    return jnp.where(denom > 0, jnp.sum(w * r) / jnp.maximum(denom, 1e-12),
+                     0.0)
+
+
+def recommend(state: CFState, user: jax.Array, k_neighbors: int = 20,
+              n_rec: int = 10) -> tuple[jax.Array, jax.Array]:
+    """Top-``n_rec`` unseen items for ``user`` by neighbour-weighted score."""
+    sims, nbrs = top_k_neighbors(state, user, k_neighbors)
+    w = jnp.maximum(sims, 0.0)
+    nbr_ratings = state.ratings[nbrs]                      # (k, m)
+    rated_mask = (nbr_ratings != 0).astype(jnp.float32)
+    scores = jnp.einsum("k,km->m", w, nbr_ratings)
+    denom = jnp.einsum("k,km->m", w, rated_mask)
+    scores = scores / jnp.maximum(denom, 1e-12)
+    scores = jnp.where(state.ratings[user] != 0, -jnp.inf, scores)
+    return jax.lax.top_k(scores, n_rec)

@@ -1,0 +1,67 @@
+"""Sorted-list maintenance: inserting a freshly-onboarded user into every
+existing user's list.
+
+The paper measures only the *construction* of the new user's own list; a
+production system must eventually also make the new user visible in other
+users' lists.  Both onboarding paths share this op so the paper's comparison
+is unaffected:
+
+  * traditional path — ``sims`` (the new user's similarity to everyone) was
+    just computed, so each row x inserts value sims[x] at its searchsorted
+    position;
+  * twin path — sim(x, u0) == sim(x, twin), which already sits in row x at
+    the twin's position, so the insert duplicates the twin's entry ("twin
+    splice"), requiring no new similarity computation — the paper's insight
+    extended to list maintenance (beyond-paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CFState, SENTINEL
+
+
+def insert_into_lists(state: CFState, new_user: jax.Array,
+                      sims: jax.Array) -> CFState:
+    """Insert ``new_user`` into every active row's ascending list.
+
+    Rows are padded at the head with SENTINEL for inactive entries, so an
+    insert drops one sentinel and shifts the prefix left:
+
+      out[j] = row[j+1]            j < p−1
+      out[p−1] = (sims[x], new_user)
+      out[j] = row[j]              j ≥ p
+    """
+    N = state.capacity
+    pos = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(
+        state.sim_vals, sims)                           # (N,) insert pos
+    j = jnp.arange(N, dtype=jnp.int32)[None, :]
+    p = pos[:, None].astype(jnp.int32)
+    src = jnp.where(j < p - 1, j + 1, j)                # gather plan
+    vals = jnp.take_along_axis(state.sim_vals, src, axis=1)
+    idxs = jnp.take_along_axis(state.sim_idx, src, axis=1)
+    at_insert = j == (p - 1)
+    vals = jnp.where(at_insert, sims[:, None].astype(vals.dtype), vals)
+    idxs = jnp.where(at_insert, jnp.int32(new_user), idxs)
+
+    row_ids = jnp.arange(N, dtype=jnp.int32)
+    live = (row_ids < state.n_active) & (row_ids != new_user)
+    vals = jnp.where(live[:, None], vals, state.sim_vals)
+    idxs = jnp.where(live[:, None], idxs, state.sim_idx)
+    return state._replace(sim_vals=vals, sim_idx=idxs)
+
+
+def splice_twin(state: CFState, new_user: jax.Array, twin: jax.Array
+                ) -> CFState:
+    """Twin-path maintenance without any similarity computation: row x's
+    value for the new user equals its stored value for the twin.  Gathers
+    sim(x, twin) from the *unsorted* view by scanning each row for the twin's
+    index, then defers to the shared insert."""
+    # Position of `twin` in each row's permutation (one masked argmax per
+    # row; O(N) per row, bandwidth-bound — the same cost class as the shift
+    # the insert itself performs).
+    hit = state.sim_idx == twin                          # (N, N) one-hot
+    pos = jnp.argmax(hit, axis=1)
+    sims = jnp.take_along_axis(state.sim_vals, pos[:, None], axis=1)[:, 0]
+    return insert_into_lists(state, new_user, sims)

@@ -1,0 +1,292 @@
+"""TwinSearch (Lu & Shen 2015, Algorithm 1) — TPU-native JAX implementation.
+
+Finds an existing *twin* (identical rating row) of a new user u0 and copies
+the twin's similarity list instead of recomputing it:
+
+  1. probe:      sim(u0, u_i*) for c random probe users          O(c·m)
+  2. search:     equal-range ``searchsorted`` pair in each probe's
+                 ascending sorted list                            O(c·log n)
+  3. intersect:  candidate bitmasks AND-reduced                   O(c·n)
+  4. verify:     exact rating-row equality on ≤ s_max gathered
+                 candidates (s_max = the paper's n/125 Gaussian
+                 bound, made a static shape)                      O(s_max·m)
+  5. copy:       gather the twin's (vals, idx) row                O(n)
+
+Hardware adaptation vs the paper's pointer/set version (DESIGN.md §3):
+equal ranges are tolerance-parameterised float intervals; the set
+intersection is a vectorised mask-AND; verification is a batched masked
+reduce instead of an early-exit loop; the probabilistic |Set_0| bound becomes
+the static candidate-gather shape with an overflow-checked fallback.
+
+The onboarding burst also always verifies against the "new block" (rows
+appended after ``n_base``): the paper's k identical users find their twin
+among each other without requiring O(n) sorted-list maintenance of the whole
+base population per insert (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baseline
+from repro.core.similarity import cosine_vs_all
+from repro.core.types import (CFState, OnboardStats, SENTINEL_GATE,
+                              TwinResult, set0_cap)
+
+
+def probe_sims(state: CFState, r0: jax.Array, probe_idx: jax.Array
+               ) -> jax.Array:
+    """sim(u0, probe_i) for each of the c probes — O(c·m)."""
+    Rp = state.ratings[probe_idx]                       # (c, m)
+    return cosine_vs_all(Rp, state.norms[probe_idx], r0)
+
+
+def candidate_mask(state: CFState, probe_idx: jax.Array, sims0: jax.Array,
+                   tol: float) -> jax.Array:
+    """(N,) bool — Set_0 = ∩_i { x : |sim(i, x) − sim(i, 0)| ≤ tol }.
+
+    Equal ranges come from a ``searchsorted`` pair on each probe's ascending
+    sorted list (the paper's binary search); the per-probe sets are
+    materialised as bitmasks scattered through the sorted-order permutation
+    and AND-reduced.  The fused Pallas kernel in ``repro/kernels/twin_probe``
+    computes the same mask without materialising the (c, N) intermediate.
+    """
+    N = state.capacity
+    rows_v = state.sim_vals[probe_idx]                  # (c, N) ascending
+    rows_i = state.sim_idx[probe_idx]                   # (c, N)
+    lo = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="left"))(
+        rows_v, sims0 - tol)
+    hi = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(
+        rows_v, sims0 + tol)
+    pos = jnp.arange(N, dtype=jnp.int32)[None, :]
+    in_range = (pos >= lo[:, None]) & (pos < hi[:, None])   # sorted order
+    c = probe_idx.shape[0]
+    user_mask = jnp.zeros((c, N), bool).at[
+        jnp.arange(c, dtype=jnp.int32)[:, None], rows_i].set(in_range)
+    # Alg. 1 lines 5-7: a probe with sim(0, i) == 1 is itself a candidate.
+    # (Its own self-entry already satisfies the range check; set explicitly
+    # so the guarantee is independent of stored-value bit patterns.)
+    self_is_cand = jnp.abs(sims0 - 1.0) <= tol
+    user_mask = user_mask.at[jnp.arange(c), probe_idx].max(self_is_cand)
+    return jnp.all(user_mask, axis=0)
+
+
+def verify_candidates(state: CFState, r0: jax.Array, cand: jax.Array,
+                      s_max: int, n_base: int, k_cap: int,
+                      rows_spec=None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather ≤ s_max candidate rows (+ the ≤ k_cap new-block rows) and test
+    exact rating equality.  Returns (found, twin_idx, n_cand, overflowed).
+
+    ``rows_spec`` (optional PartitionSpec) shards the gathered candidate
+    rows across devices so each shard verifies only its slice — without it
+    GSPMD replicates the (s_max, m) gather on every device (§Perf Cell C).
+    """
+    N = state.capacity
+    arange = jnp.arange(N, dtype=jnp.int32)
+    active = arange < state.n_active
+    cand = cand & active
+    n_cand = jnp.sum(cand, dtype=jnp.int32)
+    overflowed = n_cand > s_max
+
+    # Static-shape candidate gather: top_k on the mask is stable, so we get
+    # the s_max lowest-indexed candidates (and detect truncation above).
+    _, cidx = jax.lax.top_k(cand.astype(jnp.float32), s_max)
+    cidx = cidx.astype(jnp.int32)
+    valid = cand[cidx]
+
+    if k_cap > 0:
+        # Always verify the onboarding block (rows n_base..n_base+k_cap):
+        # the paper's k identical users twin *each other*.
+        block = n_base + jnp.arange(k_cap, dtype=jnp.int32)
+        block = jnp.minimum(block, N - 1)
+        bvalid = (n_base + jnp.arange(k_cap, dtype=jnp.int32)) < state.n_active
+        cidx = jnp.concatenate([cidx, block])
+        valid = jnp.concatenate([valid, bvalid])
+
+    rows = state.ratings[cidx]                           # (s_max+k_cap, m)
+    if rows_spec is not None:
+        rows = jax.lax.with_sharding_constraint(rows, rows_spec)
+    eq = jnp.all(rows == r0.astype(rows.dtype)[None, :], axis=1) & valid
+    found = jnp.any(eq)
+    twin_idx = cidx[jnp.argmax(eq)]
+    return found, twin_idx, n_cand, overflowed
+
+
+@partial(jax.jit, static_argnames=("s_max", "n_base", "k_cap", "tol",
+                                   "rows_spec"))
+def twinsearch_find(state: CFState, r0: jax.Array, probe_idx: jax.Array,
+                    *, s_max: int, n_base: int = 0, k_cap: int = 0,
+                    tol: float = 1e-6, rows_spec=None) -> TwinResult:
+    """Algorithm 1, lines 1-15: find a verified twin of ``r0`` (no copy)."""
+    sims0 = probe_sims(state, r0, probe_idx)
+    cand = candidate_mask(state, probe_idx, sims0, tol)
+    found, twin_idx, n_cand, overflowed = verify_candidates(
+        state, r0, cand, s_max, n_base, k_cap, rows_spec)
+    return TwinResult(found=found, twin_idx=twin_idx, n_candidates=n_cand,
+                      overflowed=overflowed, probe_sims=sims0)
+
+
+def onboard_twinsearch(state: CFState, r0: jax.Array, probe_idx: jax.Array,
+                       *, s_max: int, n_base: int = 0, k_cap: int = 0,
+                       tol: float = 1e-6, rows_spec=None
+                       ) -> tuple[CFState, TwinResult]:
+    """One new user through TwinSearch with traditional fallback.
+
+    If a twin verifies, its similarity row is copied — O(n) — and the entries
+    for the onboarding block (users added after the twin's list was built,
+    which the copied row cannot contain) are recomputed at O(k·m) and patched
+    in, so the copied list is *exactly* what a traditional build would
+    produce.  Otherwise — including not-found-and-overflowed, where the
+    static candidate cap may have truncated Set_0 — the traditional O(n·m)
+    build runs.  Both paths end in the same O(n log n) sort, which is
+    sub-dominant either way (the paper's win is avoiding the O(n·m) matvec).
+    """
+    res = twinsearch_find(state, r0, probe_idx, s_max=s_max, n_base=n_base,
+                          k_cap=k_cap, tol=tol, rows_spec=rows_spec)
+    N = state.capacity
+    from repro.core.types import SENTINEL, active_mask
+
+    def copy_path(_):
+        # Reconstruct the twin's *unsorted* similarity row by scattering its
+        # sorted list through its permutation — O(n), no similarity compute.
+        tvals = state.sim_vals[res.twin_idx]
+        tidx = state.sim_idx[res.twin_idx]
+        u = jnp.full((N,), SENTINEL, state.sim_vals.dtype)
+        u = u.at[tidx].set(tvals)
+        if k_cap > 0:
+            # Patch the onboarding block with fresh sims — O(k·m).
+            block = jnp.minimum(n_base + jnp.arange(k_cap, dtype=jnp.int32),
+                                N - 1)
+            bsims = cosine_vs_all(state.ratings[block], state.norms[block],
+                                  r0)
+            u = u.at[block].set(bsims.astype(u.dtype))
+        return jnp.where(active_mask(state), u, SENTINEL)
+
+    def build_path(_):
+        sims = cosine_vs_all(state.ratings, state.norms, r0)
+        return jnp.where(active_mask(state), sims, SENTINEL)
+
+    sims_row = jax.lax.cond(res.found, copy_path, build_path, operand=None)
+    idx = jnp.argsort(sims_row).astype(jnp.int32)
+    vals = jnp.take_along_axis(sims_row, idx, axis=-1)
+    return baseline.append_user(state, r0, vals, idx), res
+
+
+def onboard_batch(state: CFState, R_new: jax.Array, probe_idx: jax.Array,
+                  *, s_max: int | None = None, tol: float = 1e-6,
+                  set0_divisor: int = 125, set0_slack: float = 1.5,
+                  unroll: bool = False, rows_spec=None
+                  ) -> tuple[CFState, OnboardStats]:
+    """k new users via TwinSearch — the paper's O((1 + (k−1)/125)·m·n) path.
+
+    ``R_new``: (k, m); ``probe_idx``: (k, c) precomputed random probes.
+    ``n_base`` is the live count at entry; the whole burst (k rows) is the
+    always-verified new block.
+    """
+    k, _ = R_new.shape
+    n_base = int(state.capacity - k)     # capacity was sized n + k
+    if s_max is None:
+        s_max = set0_cap(n_base, set0_divisor, set0_slack)
+
+    def step(st, inp):
+        r0, probes = inp
+        st, res = onboard_twinsearch(st, r0, probes, s_max=s_max,
+                                     n_base=n_base, k_cap=k, tol=tol,
+                                     rows_spec=rows_spec)
+        return st, (res.found, res.twin_idx, res.n_candidates,
+                    res.overflowed)
+
+    state, (found, twin, ncand, ovf) = jax.lax.scan(
+        step, state, (R_new, probe_idx), unroll=k if unroll else 1)
+    return state, OnboardStats(found=found, twin_idx=twin,
+                               n_candidates=ncand, overflowed=ovf)
+
+
+def make_probes(key: jax.Array, k: int, c: int, n_base: int) -> jax.Array:
+    """(k, c) random probe indices over the base population (line 1)."""
+    return jax.random.randint(key, (k, c), 0, n_base, dtype=jnp.int32)
+
+
+def onboard_batch_buffered(state: CFState, R_new: jax.Array,
+                           probe_idx: jax.Array, *, s_max: int,
+                           tol: float = 1e-6, unroll: bool = False,
+                           rows_spec=None
+                           ) -> tuple[jax.Array, jax.Array, OnboardStats]:
+    """Distributed onboarding burst over an **immutable** base state.
+
+    The mutable-arena variant (``onboard_batch``) dynamic-updates rows of
+    the row-sharded (N, N) similarity store at a traced index inside the
+    scan; under GSPMD that lowers to full-array masked selects — measured
+    8TB/device of temp at web scale (§Perf Cell C).  Production stores land
+    new users in a small write buffer instead (merged into the arena
+    asynchronously); this implements exactly that:
+
+      * the base state (ratings, sorted lists) is read-only;
+      * the burst's rows accumulate **unsorted** in a (k, N_base + k)
+        buffer (new-block entries included, sentinel for not-yet-added);
+      * burst-internal twins verify directly against ``R_new`` (no state
+        reads at all);
+      * all k rows sort once, vectorised, at the end.
+
+    Returns (vals (k, N_tot) ascending, idx (k, N_tot), stats).
+    """
+    N_base = state.capacity
+    k, m = R_new.shape
+    N_tot = N_base + k
+    from repro.core.types import SENTINEL
+
+    Rn = R_new.astype(jnp.float32)
+    new_norms = jnp.sqrt(jnp.sum(jnp.square(Rn), axis=1))
+    karange = jnp.arange(k, dtype=jnp.int32)
+
+    def step(carry, inp):
+        buf, j = carry                          # (k, N_tot) f32, () int32
+        r0, probes = inp
+        sims0 = probe_sims(state, r0, probes)
+        cand = candidate_mask(state, probes, sims0, tol)
+        found_b, twin_b, n_cand, ovf = verify_candidates(
+            state, r0, cand, s_max, 0, 0, rows_spec)
+
+        # Burst-internal twins: verify against R_new directly.
+        live = karange < j
+        eq_new = jnp.all(R_new == r0[None, :], axis=1) & live
+        found_n = jnp.any(eq_new)
+        twin_n = jnp.argmax(eq_new).astype(jnp.int32)
+
+        # Block sims are needed on every path (the copied row must carry
+        # entries for previously-added burst users) — O(k·m).
+        bsims = cosine_vs_all(Rn, new_norms, r0.astype(jnp.float32))
+        bsims = jnp.where(live, bsims, SENTINEL)
+
+        def fallback(_):
+            return cosine_vs_all(state.ratings, state.norms, r0)
+
+        def copy_base(_):
+            u = jnp.full((N_base,), SENTINEL, jnp.float32)
+            return u.at[state.sim_idx[twin_b]].set(
+                state.sim_vals[twin_b].astype(jnp.float32))
+
+        def copy_new(_):
+            return buf[twin_n, :N_base]
+
+        branch = jnp.where(found_b, 1, jnp.where(found_n, 2, 0))
+        base_row = jax.lax.switch(branch, [fallback, copy_base, copy_new],
+                                  None)
+        row = jnp.concatenate([base_row, bsims])
+        buf = jax.lax.dynamic_update_index_in_dim(buf, row, j, axis=0)
+        found = found_b | found_n
+        twin = jnp.where(found_b, twin_b, N_base + twin_n)
+        return (buf, j + 1), (found, twin, n_cand, ovf)
+
+    buf0 = jnp.full((k, N_tot), SENTINEL, jnp.float32)
+    (buf, _), (found, twin, ncand, ovf) = jax.lax.scan(
+        step, (buf0, jnp.int32(0)), (R_new, probe_idx),
+        unroll=k if unroll else 1)
+
+    idx = jnp.argsort(buf, axis=1).astype(jnp.int32)
+    vals = jnp.take_along_axis(buf, idx, axis=1)
+    return vals, idx, OnboardStats(found=found, twin_idx=twin,
+                                   n_candidates=ncand, overflowed=ovf)

@@ -1,0 +1,89 @@
+"""Core state container for the neighbourhood-CF system.
+
+The system state is a fixed-capacity pytree so every maintenance operation
+(new-user onboarding, rating updates) is jit-able with static shapes:
+
+  * ``ratings``  — (N, m) dense rating matrix, 0 = unrated.  Row i is user i
+                   (user-based mode) or item i (item-based mode runs the same
+                   code on the transpose).
+  * ``norms``    — (N,) cached L2 row norms (0 for inactive rows).
+  * ``sim_vals`` — (N, N) per-row similarity lists sorted **ascending**
+                   (top-neighbour = tail).  Inactive entries hold SENTINEL so
+                   they sort to the head and never collide with real
+                   similarities in [-1, 1].
+  * ``sim_idx``  — (N, N) int32: ``sim_vals[i, j]`` is the similarity between
+                   user i and user ``sim_idx[i, j]``.
+  * ``n_active`` — () int32 count of live rows; rows [n_active, N) are the
+                   preallocated slots new users are appended into.
+
+Capacity N = n_base + k_cap where k_cap bounds the onboarding burst size
+(the paper's k identical new users).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.float32(-2.0)
+# Anything above this is a real similarity (cosine/pearson live in [-1, 1]).
+SENTINEL_GATE = -1.5
+
+
+class CFState(NamedTuple):
+    ratings: jax.Array          # (N, m)
+    norms: jax.Array            # (N,)
+    sim_vals: jax.Array         # (N, N) ascending per row
+    sim_idx: jax.Array          # (N, N) int32
+    n_active: jax.Array         # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.ratings.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.ratings.shape[1]
+
+
+class TwinResult(NamedTuple):
+    """Outcome of one TwinSearch probe-and-verify pass."""
+
+    found: jax.Array            # () bool — a verified twin exists
+    twin_idx: jax.Array         # () int32 — index of the twin (garbage if !found)
+    n_candidates: jax.Array     # () int32 — |Set_0| before the static cap
+    overflowed: jax.Array       # () bool — |Set_0| exceeded the static bound
+    probe_sims: jax.Array       # (c,) — sims between the new user and probes
+
+
+class OnboardStats(NamedTuple):
+    """Per-new-user statistics from a batched onboarding scan."""
+
+    found: jax.Array            # (k,) bool
+    twin_idx: jax.Array         # (k,) int32
+    n_candidates: jax.Array     # (k,) int32
+    overflowed: jax.Array       # (k,) bool
+
+
+def active_mask(state: CFState) -> jax.Array:
+    """(N,) bool — which capacity rows hold live users."""
+    return jnp.arange(state.capacity, dtype=jnp.int32) < state.n_active
+
+
+def set0_cap(n: int, divisor: int = 125, slack: float = 1.5,
+             minimum: int = 8) -> int:
+    """Static candidate-set bound from the paper's Gaussian analysis.
+
+    The paper (Sec 3.2) bounds |Set_0| by n/125; ``slack`` absorbs tie mass
+    the Gaussian model under-counts on small/quantised datasets.  This bound
+    becomes the *shape* of the candidate gather, turning the paper's
+    probabilistic argument into the compiled program's contract.
+    """
+    import math
+    cap = max(minimum, int(math.ceil(n / divisor * slack)))
+    if cap > 512:
+        # round to the shard boundary so the candidate gather can shard
+        # evenly over every mesh axis (see verify rows_spec)
+        cap = -(-cap // 512) * 512
+    return cap

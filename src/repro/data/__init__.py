@@ -1,0 +1,10 @@
+from repro.data.synthetic import (douban_film, movielens_100k, plant_twins,
+                                  synth_ratings)
+from repro.data.tokens import TokenPipeline
+from repro.data.graph import (CSR, NeighborSampler, cora_like,
+                              molecule_batch, random_graph)
+from repro.data.recsys_stream import CTRStream, TwoTowerStream
+
+__all__ = ["douban_film", "movielens_100k", "plant_twins", "synth_ratings",
+           "TokenPipeline", "CSR", "NeighborSampler", "cora_like",
+           "molecule_batch", "random_graph", "CTRStream", "TwoTowerStream"]

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (MeshAxes, cf_shardings,
+                                        gnn_shardings, lm_shardings,
+                                        mesh_axes, named, recsys_shardings,
+                                        zero_extend)
+
+__all__ = ["MeshAxes", "cf_shardings", "gnn_shardings", "lm_shardings",
+           "mesh_axes", "named", "recsys_shardings", "zero_extend"]

@@ -1,0 +1,392 @@
+"""Per-family sharding rules (DESIGN.md §5).
+
+Every rule is written against axis *roles*, not literal mesh shapes:
+``dp`` = the data-parallel axes (('pod','data') on the multi-pod mesh,
+('data',) on one pod), ``mp`` = the model/tensor axis.  ``all`` = every
+axis (used for row-sharding giant embedding tables / similarity lists).
+
+Functions return pytrees of ``PartitionSpec`` matching the corresponding
+param/input pytrees; ``launch/dryrun.py`` wraps them into NamedShardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CFConfig, GNNConfig, LMConfig, RecsysConfig
+from repro.models.transformer import LMShardingHooks, is_global_layer
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple[str, ...]          # data-parallel axes
+    mp: str                      # model/tensor axis
+    sizes: dict[str, int]
+
+    @property
+    def all(self) -> tuple[str, ...]:
+        return self.dp + (self.mp,)
+
+    @property
+    def mp_size(self) -> int:
+        return self.sizes[self.mp]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp:
+            n *= self.sizes[a]
+        return n
+
+
+def mesh_axes(mesh: jax.sharding.Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    assert names[-1] == "model", names
+    return MeshAxes(dp=tuple(names[:-1]), mp="model", sizes=sizes)
+
+
+def named(mesh: jax.sharding.Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+FSDP_MIN_LEAF = 1 << 22       # leaves >= 4M elements also shard over dp
+
+
+def _fsdp_axes(ax: MeshAxes, dim_size: int) -> tuple | str:
+    """Extend the model axis with the largest dp-axis prefix that divides
+    ``dim_size`` — maxtext-style ('tensor','fsdp') weight sharding.  The dp
+    axes land on a weight dim that is NEVER a contraction dim of its
+    matmul, so GSPMD resolves the mismatch with a weight-sized all-gather
+    (true FSDP) rather than activation-sized partial-sum psums."""
+    chosen: list = [ax.mp]
+    prod = ax.mp_size
+    for a in ax.dp[::-1]:                    # minor-most dp axis first
+        if dim_size % (prod * ax.sizes[a]) == 0:
+            chosen.append(a)
+            prod *= ax.sizes[a]
+    return tuple(chosen) if len(chosen) > 1 else ax.mp
+
+
+def lm_param_specs(cfg: LMConfig, ax: MeshAxes,
+                   decode: bool = False) -> dict:
+    """Megatron TP over ``model`` + FSDP: each weight's mp-sharded
+    *output* dim extends over the dp axes where divisible, so a 100B-param
+    MoE stores ~0.5GB/chip instead of 13.4GB at the cost of weight-sized
+    per-layer all-gathers (visible in the collective roofline term, exactly
+    as on a real FSDP fleet).
+
+    ``decode=True`` switches to weight-stationary sharding: the dp axes go
+    on *contraction* dims instead, trading the (unrolled-decode-hoisted)
+    weight all-gathers for activation-sized partial-sum psums — negligible
+    at decode shapes (measured: llama4 decode temp 58GB -> fits)."""
+    mp = ax.mp
+    shard_kv = cfg.n_kv_heads % ax.mp_size == 0
+    if decode:
+        def fa(n):                           # weights stay sharded in place
+            return _fsdp_axes(ax, n)
+        # contraction-dim dp sharding applied post-hoc below
+    else:
+        fa = lambda n: _fsdp_axes(ax, n)    # noqa: E731
+    layers: dict[str, P] = {
+        "attn_norm": P(None, None),
+        "mlp_norm": P(None, None),
+        "wq": P(None, None, fa(cfg.q_dim)),
+        "wk": P(None, None, fa(cfg.kv_dim)) if shard_kv
+        else P(None, None, None),
+        "wv": P(None, None, fa(cfg.kv_dim)) if shard_kv
+        else P(None, None, None),
+        "wo": P(None, fa(cfg.q_dim), None),
+    }
+    if cfg.moe is not None:
+        m = cfg.moe
+        gf = 2 if cfg.act in ("swiglu", "geglu") else 1
+        shard_e = m.n_experts % ax.mp_size == 0
+        if shard_e:
+            # Experts over mp; the output dim (f for w_in, d for w_out)
+            # takes the dp/FSDP axes.
+            dp_f = zero_extend(P(None, mp, None, None),
+                               (1, m.n_experts, cfg.d_model,
+                                gf * m.d_ff_expert), ax, start=3)
+            dp_d = zero_extend(P(None, mp, None, None),
+                               (1, m.n_experts, m.d_ff_expert,
+                                cfg.d_model), ax, start=3)
+            espec_in, espec_out = dp_f, dp_d
+        else:
+            espec_in = P(None, None, None, fa(gf * m.d_ff_expert))
+            espec_out = P(None, None, fa(m.d_ff_expert), None)
+        layers.update({
+            "router": P(None, None, None),
+            "w_in_e": espec_in,
+            "w_out_e": espec_out,
+        })
+        if m.n_shared:
+            layers["w_in_sh"] = P(None, None,
+                                  fa(gf * m.n_shared * m.d_ff_expert))
+            layers["w_out_sh"] = P(None, fa(m.n_shared * m.d_ff_expert),
+                                   None)
+    else:
+        gf = 2 if cfg.act in ("swiglu", "geglu") else 1
+        layers["w_in"] = P(None, None, fa(gf * cfg.d_ff))
+        layers["w_out"] = P(None, fa(cfg.d_ff), None)
+    specs = {
+        "embed": P(mp, None),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, mp)
+    if decode:
+        # Weight-stationary: replace (mp, dp...) output-dim extensions with
+        # dp on the first free dim >= 1 (contraction) — no gathers at all.
+        import repro.models.transformer as lm_mod
+        structs = lm_mod.param_structs(cfg)
+
+        def stationary(spec, struct):
+            # strip dp axes (keep mp / None), then re-extend on a free dim
+            def strip(p):
+                if isinstance(p, tuple):
+                    kept = [a for a in p if a not in ax.dp]
+                    return kept[0] if len(kept) == 1 else (
+                        tuple(kept) if kept else None)
+                return None if p in ax.dp else p
+            base = P(*[strip(p) for p in tuple(spec)])
+            if struct.size >= FSDP_MIN_LEAF:
+                return zero_extend(base, struct.shape, ax, start=1)
+            return base
+
+        specs["layers"] = jax.tree.map(
+            stationary, specs["layers"], structs["layers"],
+            is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def lm_hooks(cfg: LMConfig, ax: MeshAxes) -> LMShardingHooks:
+    seq = ax.mp if cfg.seq_shard else None
+    moe_tok = moe_exp = None
+    if cfg.moe is not None:
+        moe_tok = P(ax.dp, None, None)
+        moe_exp = (P(ax.dp, ax.mp, None, None)
+                   if cfg.moe.n_experts % ax.mp_size == 0 else None)
+    return LMShardingHooks(acts=P(ax.dp, seq, None),
+                           logits=P(ax.dp, None, ax.mp),
+                           moe_tokens=moe_tok, moe_experts=moe_exp)
+
+
+def lm_batch_specs(ax: MeshAxes) -> dict:
+    return {"tokens": P(ax.dp, None)}
+
+
+def lm_cache_specs(cfg: LMConfig, ax: MeshAxes, batch: int,
+                   seq_len: int) -> dict:
+    """Decode cache: batch over dp when it divides; heads over mp when they
+    divide; otherwise (MQA / small GQA / batch=1 long-context) the
+    sequence axis takes the leftover axes (flash-decoding split — GSPMD
+    partitions the contraction + softmax across the cache shards)."""
+    mp = ax.mp
+    heads_ok = cfg.n_kv_heads % ax.mp_size == 0
+    b_ok = batch % ax.dp_size == 0
+
+    def seq_axes(length: int, avail: tuple):
+        """Largest prefix of ``avail`` whose product divides ``length``."""
+        chosen: list = []
+        prod = 1
+        for a in avail:
+            if length % (prod * ax.sizes[a]) == 0:
+                chosen.append(a)
+                prod *= ax.sizes[a]
+        return tuple(chosen) if chosen else None
+
+    def cache_spec(length: int) -> P:
+        if b_ok and heads_ok:
+            return P(None, ax.dp, None, mp, None)
+        if b_ok:
+            return P(None, ax.dp, seq_axes(length, (mp,)), None, None)
+        if heads_ok:
+            return P(None, None, seq_axes(length, ax.dp), mp, None)
+        return P(None, None, seq_axes(length, ax.dp + (mp,)), None, None)
+
+    specs = {}
+    has_global = cfg.window is None or cfg.global_every is not None
+    if has_global:
+        full = cache_spec(seq_len)
+        specs["kg"] = full
+        specs["vg"] = full
+    if cfg.window is not None:
+        ring = cache_spec(cfg.window)
+        specs.update(kl=ring, vl=ring, ring_pos=P(None))
+    return specs
+
+
+def lm_shardings(cfg: LMConfig, ax: MeshAxes, kind: str, batch: int,
+                 seq_len: int) -> dict:
+    params = lm_param_specs(cfg, ax, decode=(kind == "decode"))
+    hooks = lm_hooks(cfg, ax)
+    # Expert parallelism (shard_map all-to-all) whenever experts divide the
+    # model axis and activations are sharded (train/prefill cells).
+    if (cfg.moe is not None and cfg.moe.n_experts % ax.mp_size == 0
+            and kind in ("train", "prefill")):
+        from repro.models.moe_ep import MoEEPInfo
+        win = params["layers"]["w_in_e"]
+        wout = params["layers"]["w_out_e"]
+        hooks = hooks._replace(moe_ep=MoEEPInfo(
+            dp=ax.dp, mp=ax.mp, mp_size=ax.mp_size,
+            win_spec=P(*tuple(win)[1:]),
+            wout_spec=P(*tuple(wout)[1:]),
+            acts_spec=hooks.acts,
+        ))
+    out: dict[str, Any] = {
+        "params": params,
+        "hooks": hooks,
+    }
+    b = ax.dp if batch % ax.dp_size == 0 else None
+    if kind == "train":
+        out["inputs"] = {"tokens": P(b, None)}
+    elif kind == "prefill":
+        out["inputs"] = {"tokens": P(b, None)}
+        out["cache"] = lm_cache_specs(cfg, ax, batch, seq_len)
+    elif kind == "decode":
+        out["inputs"] = {
+            "cache": lm_cache_specs(cfg, ax, batch, seq_len),
+            "tokens": P(b, None),
+            "pos": P(),
+        }
+        out["logits"] = P(b, ax.mp)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_shardings(cfg: GNNConfig, ax: MeshAxes, kind: str) -> dict:
+    params = jax.tree.map(lambda _: P(), {"l1": {"W": 0, "a_src": 0,
+                                                 "a_dst": 0},
+                                          "l2": {"W": 0, "a_src": 0,
+                                                 "a_dst": 0}})
+    if kind == "train_full":
+        inputs = {
+            "feats": P(ax.dp, None),
+            "edge_src": P(ax.all),
+            "edge_dst": P(ax.all),
+            "labels": P(ax.dp),
+            "mask": P(ax.dp),
+        }
+    elif kind == "train_sampled":
+        inputs = {
+            "feats": P(ax.all, None),     # sharded feature store
+            "roots": P(ax.dp),
+            "nbr1": P(ax.dp, None),
+            "nbr2": P(ax.dp, None),
+            "labels": P(ax.dp),
+        }
+    else:                                  # train_batched
+        inputs = {
+            "feats": P(ax.dp, None, None),
+            "edge_src": P(ax.dp, None),
+            "edge_dst": P(ax.dp, None),
+            "labels": P(ax.dp),
+        }
+    return {"params": params, "inputs": inputs}
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+
+def _recsys_param_specs(params_struct, ax: MeshAxes) -> Any:
+    """Tables (any leaf with >= 2**16 rows) shard rows over every axis;
+    small dense params replicate."""
+    def rule(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] >= (1 << 16):
+            return P(ax.all, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(rule, params_struct)
+
+
+def recsys_shardings(cfg: RecsysConfig, ax: MeshAxes, kind: str,
+                     params_struct) -> dict:
+    params = _recsys_param_specs(params_struct, ax)
+    inputs: dict[str, P] = {}
+    if cfg.variant == "two_tower" and kind == "retrieval":
+        # 1M candidates shard over dp only (10^6 is not 512-divisible).
+        inputs = {"user_id": P(), "user_fields": P(None, None),
+                  "cand_ids": P(ax.dp), "cand_fields": P(ax.dp, None)}
+    else:
+        key_rank = {"sparse_idx": 2, "dense": 2, "multi_idx": 2,
+                    "multi_mask": 2, "hist": 2, "target": 1, "label": 1,
+                    "user_id": 1, "user_fields": 2, "item_id": 1,
+                    "item_fields": 2}
+        for k, r in key_rank.items():
+            inputs[k] = P(ax.dp, *([None] * (r - 1)))
+    return {"params": params, "inputs": inputs}
+
+
+# ---------------------------------------------------------------------------
+# CF (the paper)
+# ---------------------------------------------------------------------------
+
+def cf_shardings(cfg: CFConfig, ax: MeshAxes, kind: str) -> dict:
+    rows_all = P(ax.all, None)
+    if kind == "build":
+        return {
+            "inputs": {"R": P(ax.dp, None)},
+            "block": P(ax.dp, ax.mp),
+            "rows": rows_all,
+            "out": (rows_all, rows_all),
+        }
+    # onboard
+    from repro.core.types import CFState
+    return {
+        "inputs": {
+            "state": CFState(
+                ratings=rows_all,
+                norms=P(ax.all),
+                sim_vals=rows_all,
+                sim_idx=rows_all,
+                n_active=P(),
+            ),
+            "R_new": P(None, None),
+            "probes": P(None, None),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding (ZeRO-1-style extension)
+# ---------------------------------------------------------------------------
+
+def zero_extend(spec: P, shape: tuple[int, ...], ax: MeshAxes,
+                start: int = 0) -> P:
+    """Add dp sharding to the first unsharded, evenly-divisible axis (>=
+    ``start``) of a leaf so Adam moments/master weights/FSDP params spread
+    over the data axes instead of replicating.  No-op if any dp axis is
+    already used (e.g. embedding tables row-sharded over every axis)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used: set[str] = set()
+    for p in parts:
+        if p is None:
+            continue
+        for a in (p if isinstance(p, tuple) else (p,)):
+            used.add(a)
+    if used & set(ax.dp):
+        return P(*parts)
+    dp_n = ax.dp_size
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if i < start:
+            continue
+        if p is None and s % dp_n == 0 and s >= dp_n:
+            parts[i] = ax.dp
+            return P(*parts)
+    return P(*parts)

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the performance-critical hot spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with padding), and ref.py (pure-jnp
+oracle the tests assert against in interpret mode).
+
+  similarity/     blocked cosine-similarity matmul, fused norm epilogue
+                  (the paper's traditional-path hot loop)
+  twin_probe/     fused c-probe interval intersection + |Set_0| count
+  verify_rows/    fused masked row-equality verification (Alg. 1 ll.10-15)
+  embedding_bag/  scalar-prefetch row-gather bag sum (recsys substrate)
+"""
+from repro.kernels.similarity.ops import cosine_similarity
+from repro.kernels.twin_probe.ops import twin_probe
+from repro.kernels.verify_rows.ops import verify_rows
+from repro.kernels.embedding_bag.ops import embedding_bag
+
+__all__ = ["cosine_similarity", "twin_probe", "verify_rows",
+           "embedding_bag"]

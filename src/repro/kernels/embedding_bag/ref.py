@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the embedding-bag kernel (gather + masked sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, idx: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    rows = jnp.take(table, idx, axis=0)                  # (n_bags, hot, dim)
+    return jnp.sum(rows * weights[..., None].astype(rows.dtype), axis=1)

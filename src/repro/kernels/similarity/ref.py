@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the similarity kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def similarity_ref(Q: jax.Array, R: jax.Array, q_norms: jax.Array,
+                   r_norms: jax.Array) -> jax.Array:
+    dots = jnp.einsum("qm,nm->qn", Q.astype(jnp.float32),
+                      R.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    denom = jnp.maximum(q_norms[:, None] * r_norms[None, :], EPS)
+    return dots / denom

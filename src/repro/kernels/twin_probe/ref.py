@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the twin-probe intersection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def twin_probe_ref(probe_rows: jax.Array, sims0: jax.Array,
+                   tol: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    hit = jnp.abs(probe_rows - sims0[:, None]) <= tol    # (c, N)
+    mask = jnp.all(hit, axis=0)
+    return mask, jnp.sum(mask.astype(jnp.int32))

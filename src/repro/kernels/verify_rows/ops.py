@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the verification kernel (pad + run + squeeze)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.verify_rows.kernel import verify_rows_pallas
+
+
+@partial(jax.jit, static_argnames=("bs", "bk", "interpret"))
+def verify_rows(C: jax.Array, r0: jax.Array, valid: jax.Array, *,
+                bs: int = 256, bk: int = 512,
+                interpret: bool = True) -> jax.Array:
+    """(s, m) candidates vs (m,) target -> (s,) bool verified-twin flags."""
+    s, m = C.shape
+    ps, pk = (-s) % bs, (-m) % bk
+    Cp = jnp.pad(C, ((0, ps), (0, pk)))
+    # Padded item columns must match on padded rows too: r0 pads with zeros,
+    # matching C's zero padding, so equality is preserved.
+    r0p = jnp.pad(r0, (0, pk))
+    vp = jnp.pad(valid, (0, ps))            # padded rows -> invalid
+    out = verify_rows_pallas(Cp, r0p, vp, bs=bs, bk=bk, interpret=interpret)
+    return out[:s, 0]

@@ -1,0 +1,126 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per DESIGN.md §6: ``cost_analysis()`` on the SPMD-partitioned executable
+reports *per-device* FLOPs and bytes (verified by probe); collective bytes
+are summed from the compiled HLO text (per-device operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+  t_compute    = flops / PEAK_FLOPS
+  t_memory     = bytes / HBM_BW
+  t_collective = coll_bytes / ICI_BW
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (we
+use 49.5e9).  The dominant term is the projected bottleneck; MODEL_FLOPS /
+HLO_FLOPs measures useful-compute fraction (catches remat/dispatch waste).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 49.5e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict[str, dict]:
+    """Per-op-kind {count, bytes} from compiled HLO (result-shape bytes,
+    per device; ``-done`` ops skipped so start/done pairs count once)."""
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += _shape_bytes(shape_text)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    bytes_hbm: float
+    bytes_coll: float
+    model_flops: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_hbm,
+            "coll_bytes_per_device": self.bytes_coll,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops_per_device": self.model_flops,
+            "useful_fraction": self.useful_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(compiled, model_flops_per_device: float = 0.0) -> RooflineTerms:
+    cost = compiled.cost_analysis() or {}
+    census = collective_census(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in census.values())
+    return RooflineTerms(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_hbm=float(cost.get("bytes accessed", 0.0)),
+        bytes_coll=float(coll_bytes),
+        model_flops=model_flops_per_device,
+        collectives=census,
+    )

@@ -1,0 +1,318 @@
+"""Cell builder: (arch spec, shape, mesh) -> jit-ready step function with
+input structs + sharding trees.  This is the single dispatch point the
+dry-run, the trainer and the benchmarks all share.
+
+Train cells lower the *full* train step (loss -> backward -> AdamW update
+with ZeRO-sharded optimizer state) so the gradient-synchronisation and
+optimizer collectives are part of the compiled artifact being analysed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import cf as cf_mod
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as lm_mod
+from repro.training.optimizer import AdamW, AdamWState
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple                      # ShapeDtypeStruct pytrees
+    in_specs: Any                    # PartitionSpec pytrees (tuple matching args)
+    out_specs: Any                   # or None for auto
+    donate: tuple[int, ...]
+    model_flops: float               # analytic useful FLOPs (whole step, global)
+
+
+def _opt_structs_and_specs(param_structs, param_specs, ax):
+    opt = AdamW(lr=3e-4, weight_decay=0.01)
+    opt_structs = jax.eval_shape(opt.init, param_structs)
+
+    def ext(spec, struct):
+        return shd.zero_extend(spec, struct.shape, ax)
+
+    opt_specs = AdamWState(
+        step=P(),
+        mu=jax.tree.map(ext, param_specs, param_structs,
+                        is_leaf=lambda x: isinstance(x, P)),
+        nu=jax.tree.map(ext, param_specs, param_structs,
+                        is_leaf=lambda x: isinstance(x, P)),
+        master=jax.tree.map(ext, param_specs, param_structs,
+                            is_leaf=lambda x: isinstance(x, P)),
+    )
+    return opt, opt_structs, opt_specs
+
+
+def _train_step(loss_fn, optimizer):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Analytic useful-FLOPs models (global, whole step; coarse ±20% — the
+# roofline's useful-fraction denominator, not a benchmark number)
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg, shape: ShapeSpec) -> float:
+    N = cfg.active_param_count()
+    B, S = shape.dim("global_batch"), shape.dim("seq_len")
+    if shape.kind == "train":
+        return 6.0 * N * B * S
+    if shape.kind == "prefill":
+        return 2.0 * N * B * S
+    return 2.0 * N * B                   # decode: one token per sequence
+
+
+def gnn_model_flops(cfg, shape: ShapeSpec) -> float:
+    H, F = cfg.n_heads, cfg.d_hidden
+    d = shape.dim("d_feat")
+    C = cfg.n_classes
+    if shape.kind == "train_full":
+        N, E = shape.dim("n_nodes"), shape.dim("n_edges") + shape.dim(
+            "n_nodes")
+        fwd = 2 * N * d * H * F + 2 * N * H * F * H * C + \
+            4 * E * H * (F + C)
+        return 3.0 * fwd
+    if shape.kind == "train_sampled":
+        B = shape.dim("batch_nodes")
+        f1, f2 = shape.dim("fanout")
+        n1 = B * (1 + f1)
+        fwd = 2 * n1 * (1 + f2) * d * H * F + 2 * B * (1 + f1) * H * F * \
+            H * C
+        return 3.0 * fwd
+    Bt = shape.dim("batch")
+    n, e = shape.dim("n_nodes"), shape.dim("n_edges") + shape.dim("n_nodes")
+    fwd = Bt * (2 * n * d * H * F + 2 * n * H * F * H * C + 4 * e * H *
+                (F + C))
+    return 3.0 * fwd
+
+
+def recsys_model_flops(cfg, shape: ShapeSpec) -> float:
+    B = shape.dim("batch")
+    if shape.kind == "retrieval":
+        B = shape.dim("n_candidates")
+    D, m = cfg.embed_dim, cfg.n_sparse
+    if cfg.variant == "xdeepfm":
+        cin = 0
+        prev = m
+        for h in cfg.cin_layers:
+            cin += prev * m * D + 2 * prev * m * h * D
+            prev = h
+        dnn_in = m * D + cfg.n_dense
+        dnn = 2 * (dnn_in * cfg.mlp_dims[0] +
+                   sum(a * b for a, b in zip(cfg.mlp_dims,
+                                             cfg.mlp_dims[1:])))
+        fwd = B * (cin + dnn)
+    elif cfg.variant == "autoint":
+        T = m + cfg.n_dense
+        A = cfg.d_attn
+        per = 4 * T * D * A + 2 * T * T * A * 2
+        fwd = B * (cfg.n_attn_layers * per + T * A * 2)
+    elif cfg.variant == "bst":
+        S = cfg.seq_len + 1
+        attn = 4 * S * D * D + 4 * S * S * D + 8 * D * D * S
+        flat = (S + m) * D
+        mlp = 2 * (flat * cfg.mlp_dims[0] +
+                   sum(a * b for a, b in zip(cfg.mlp_dims,
+                                             cfg.mlp_dims[1:])))
+        fwd = B * (attn + mlp)
+    else:                                # two_tower
+        dims = cfg.tower_mlp
+        u_in, i_in = 128 + 4 * 32, 128 + 2 * 32
+        tower = 2 * (u_in * dims[0] + i_in * dims[0] +
+                     2 * sum(a * b for a, b in zip(dims, dims[1:])))
+        fwd = B * tower
+        if shape.kind == "train":
+            fwd += 2 * B * B * dims[-1]
+        if shape.kind == "retrieval":
+            fwd += 2 * B * dims[-1]
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * fwd
+
+
+def cf_model_flops(cfg, shape: ShapeSpec) -> float:
+    n, m = shape.dim("n_users"), shape.dim("n_items")
+    if shape.kind == "build":
+        return 2.0 * n * n * m
+    k = shape.dim("k_new")
+    # Paper Sec 3.2: O((1 + (k-1)/125) * m * n) for the burst.
+    return 2.0 * n * m * (1.0 + (k - 1) / cfg.set0_divisor)
+
+
+# ---------------------------------------------------------------------------
+# Family cell builders
+# ---------------------------------------------------------------------------
+
+def _lm_cell(spec: ArchSpec, shape: ShapeSpec, ax: shd.MeshAxes,
+             unroll: bool = False, mesh=None) -> Cell:
+    cfg = spec.config
+    sh = shd.lm_shardings(cfg, ax, shape.kind, shape.dim("global_batch"),
+                          shape.dim("seq_len"))
+    if sh["hooks"].moe_ep is not None:
+        sh["hooks"] = sh["hooks"]._replace(
+            moe_ep=sh["hooks"].moe_ep._replace(mesh=mesh))
+    pstructs = lm_mod.param_structs(cfg)
+    pspecs = sh["params"]
+    hooks = sh["hooks"]
+    inputs = lm_mod.input_structs(cfg, shape)
+    flops = lm_model_flops(cfg, shape)
+
+    if shape.kind == "train":
+        opt, ostructs, ospecs = _opt_structs_and_specs(pstructs, pspecs, ax)
+        step = _train_step(
+            lambda p, b: lm_mod.lm_loss(p, b["tokens"], cfg, hooks,
+                                        unroll=unroll), opt)
+        return Cell(
+            name=f"{spec.arch_id}/{shape.name}", fn=step,
+            args=(pstructs, ostructs, inputs),
+            in_specs=(pspecs, ospecs, sh["inputs"]),
+            out_specs=(pspecs, ospecs, P()),
+            donate=(0, 1), model_flops=flops)
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return lm_mod.prefill(params, batch["tokens"], cfg, hooks,
+                                  unroll=unroll)
+        return Cell(
+            name=f"{spec.arch_id}/{shape.name}", fn=step,
+            args=(pstructs, inputs),
+            in_specs=(pspecs, sh["inputs"]),
+            out_specs=(P(ax.dp, ax.mp), sh["cache"]),
+            donate=(), model_flops=flops)
+    # decode
+    def step(params, cache, tokens, pos):
+        return lm_mod.decode_step(params, cache, tokens, pos, cfg, hooks)
+    return Cell(
+        name=f"{spec.arch_id}/{shape.name}", fn=step,
+        args=(pstructs, inputs["cache"], inputs["tokens"], inputs["pos"]),
+        in_specs=(pspecs, sh["inputs"]["cache"], sh["inputs"]["tokens"],
+                  sh["inputs"]["pos"]),
+        out_specs=(sh["logits"], sh["inputs"]["cache"]),
+        donate=(1,), model_flops=flops)
+
+
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, ax: shd.MeshAxes,
+              unroll: bool = False, mesh=None) -> Cell:
+    cfg = spec.config
+    sh = shd.gnn_shardings(cfg, ax, shape.kind)
+    d = shape.dim("d_feat")
+    n_out = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47,
+             "molecule": 2}.get(shape.name, cfg.n_classes)
+    pstructs = jax.eval_shape(
+        lambda: gnn_mod.init_params(jax.random.PRNGKey(0), cfg, d, n_out))
+    pspecs = jax.tree.map(lambda _: P(), pstructs)
+    inputs = gnn_mod.input_structs(cfg, shape)
+    if shape.kind == "train_full":
+        # Edge-parallel shard_map formulation (§Perf Cell B): messages stay
+        # local to their edge shard; node aggregates psum.
+        from repro.models.gnn_ep import GNNEPInfo, loss_full_ep
+        info = GNNEPInfo(axes=ax.all, mesh=mesh)
+        sh["inputs"]["feats"] = P(None, None)      # replicated feature store
+        loss = lambda p, b, c: loss_full_ep(p, b, c, info)   # noqa: E731
+    else:
+        loss = gnn_mod.LOSS_BY_KIND[shape.kind]
+    opt, ostructs, ospecs = _opt_structs_and_specs(pstructs, pspecs, ax)
+    step = _train_step(lambda p, b: loss(p, b, cfg), opt)
+    return Cell(
+        name=f"{spec.arch_id}/{shape.name}", fn=step,
+        args=(pstructs, ostructs, inputs),
+        in_specs=(pspecs, ospecs, sh["inputs"]),
+        out_specs=(pspecs, ospecs, P()),
+        donate=(0, 1), model_flops=gnn_model_flops(cfg, shape))
+
+
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, ax: shd.MeshAxes,
+                 unroll: bool = False, mesh=None) -> Cell:
+    cfg = spec.config
+    pstructs = jax.eval_shape(
+        lambda: rec_mod.init_params(jax.random.PRNGKey(0), cfg))
+    sh = shd.recsys_shardings(cfg, ax, shape.kind, pstructs)
+    pspecs = sh["params"]
+    inputs = rec_mod.input_structs(cfg, shape)
+    in_specs = {k: sh["inputs"][k] for k in inputs}
+    flops = recsys_model_flops(cfg, shape)
+    name = f"{spec.arch_id}/{shape.name}"
+
+    if shape.kind == "train":
+        opt, ostructs, ospecs = _opt_structs_and_specs(pstructs, pspecs, ax)
+        step = _train_step(lambda p, b: rec_mod.loss(p, b, cfg), opt)
+        return Cell(name=name, fn=step, args=(pstructs, ostructs, inputs),
+                    in_specs=(pspecs, ospecs, in_specs),
+                    out_specs=(pspecs, ospecs, P()), donate=(0, 1),
+                    model_flops=flops)
+    if shape.kind == "retrieval" and cfg.variant == "two_tower":
+        def step(params, batch):
+            return rec_mod.retrieve(params, batch, cfg)
+        return Cell(name=name, fn=step, args=(pstructs, inputs),
+                    in_specs=(pspecs, in_specs), out_specs=None,
+                    donate=(), model_flops=flops)
+
+    def step(params, batch):
+        return rec_mod.forward(params, batch, cfg)
+    return Cell(name=name, fn=step, args=(pstructs, inputs),
+                in_specs=(pspecs, in_specs), out_specs=None, donate=(),
+                model_flops=flops)
+
+
+def _cf_cell(spec: ArchSpec, shape: ShapeSpec, ax: shd.MeshAxes,
+             unroll: bool = False, mesh=None) -> Cell:
+    cfg = spec.config
+    sh = shd.cf_shardings(cfg, ax, shape.kind)
+    inputs = cf_mod.input_structs(cfg, shape)
+    flops = cf_model_flops(cfg, shape)
+    name = f"{spec.arch_id}/{shape.name}"
+    if shape.kind == "build":
+        def step(R):
+            return cf_mod.build_step(R, block_spec=sh["block"],
+                                     rows_spec=sh["rows"])
+        return Cell(name=name, fn=step, args=(inputs["R"],),
+                    in_specs=(sh["inputs"]["R"],), out_specs=sh["out"],
+                    donate=(), model_flops=flops)
+
+    def step(state, R_new, probes):
+        return cf_mod.onboard_step(state, R_new, probes, cfg, unroll=unroll,
+                                   mesh_info=(ax.all, mesh))
+    return Cell(name=name, fn=step,
+                args=(inputs["state"], inputs["R_new"], inputs["probes"]),
+                in_specs=(sh["inputs"]["state"], sh["inputs"]["R_new"],
+                          sh["inputs"]["probes"]),
+                out_specs=None, donate=(), model_flops=flops)
+
+
+_BUILDERS = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell,
+             "cf": _cf_cell}
+
+
+def build_cell(spec: ArchSpec, shape: ShapeSpec,
+               mesh: jax.sharding.Mesh, unroll: bool = False) -> Cell:
+    """``unroll=True`` (dry-run) unrolls every scan so cost analysis and
+    the collective census count all iterations (XLA prices while-loop
+    bodies once)."""
+    ax = shd.mesh_axes(mesh)
+    return _BUILDERS[spec.family](spec, shape, ax, unroll, mesh)
+
+
+def jit_cell(cell: Cell, mesh: jax.sharding.Mesh):
+    """Wrap the cell into a jit with NamedShardings bound to ``mesh``."""
+    in_sh = shd.named(mesh, cell.in_specs)
+    out_sh = shd.named(mesh, cell.out_specs) if cell.out_specs is not None \
+        else None
+    kwargs: dict[str, Any] = {"in_shardings": in_sh}
+    if out_sh is not None:
+        kwargs["out_shardings"] = out_sh
+    if cell.donate:
+        kwargs["donate_argnums"] = cell.donate
+    return jax.jit(cell.fn, **kwargs)

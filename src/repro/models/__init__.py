@@ -1,0 +1,5 @@
+from repro.models import attention, cf, embedding, gnn, layers, moe, recsys
+from repro.models import transformer
+
+__all__ = ["attention", "cf", "embedding", "gnn", "layers", "moe", "recsys",
+           "transformer"]

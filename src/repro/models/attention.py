@@ -1,0 +1,107 @@
+"""Grouped-query attention with causal/sliding-window masking.
+
+One implementation covers the three serving shapes:
+  * train/prefill — online-softmax scan over KV chunks (flash-style, so 32k
+    prefill never materialises an S×S score matrix);
+  * decode (Sq == 1) — single block over the whole KV cache; with the cache's
+    sequence axis sharded over the model mesh axis, GSPMD partitions the
+    contraction + softmax into the flash-decoding split-KV pattern;
+  * sliding-window layers — position-derived band mask; decode uses a ring
+    buffer of size W with an explicit written-position vector.
+
+Positions are explicit int32 vectors so causal, windowed, ring-buffer and
+padding semantics all reduce to one mask expression:
+  valid = (kpos >= 0) & (kpos <= qpos) & (window is None | kpos > qpos - W).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, window: int | None
+          ) -> jax.Array:
+    """(..., Sq, Sk) bool validity mask from position vectors."""
+    q = qpos[..., :, None].astype(jnp.int32)
+    k = kpos[..., None, :].astype(jnp.int32)
+    ok = (k >= 0) & (k <= q)
+    if window is not None:
+        ok &= k > q - window
+    return ok
+
+
+def _block_attn(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
+                kpos: jax.Array, window: int | None) -> jax.Array:
+    """Unchunked reference path. q: (B,Sq,Hkv,G,hd); k,v: (B,Sk,Hkv,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    ok = _mask(qpos, kpos, window)[None, None, None]     # (1,1,1,Sq,Sk)
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attn(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
+                  kpos: jax.Array, window: int | None, chunk: int,
+                  unroll: bool = False) -> jax.Array:
+    """Online-softmax scan over KV chunks (flash-attention recurrence)."""
+    B, Sq, Hkv, G, hd = q.shape
+    Sk = k.shape[1]
+    n_chunks = Sk // chunk
+    assert n_chunks * chunk == Sk, (Sk, chunk)
+    scale = hd ** -0.5
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(n_chunks, chunk)
+
+    def step(carry, inp):
+        acc, m, l = carry                               # acc: (B,Sq,Hkv,G,hd)
+        kj, vj, pj = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        ok = _mask(qpos, pj, window)[None, None, None]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))     # (B,Hkv,G,Sq)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vj.dtype), vj)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + \
+            pv.astype(jnp.float32)
+        return (acc_new, m_new, l_new), ()
+
+    init = (jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32),
+            jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq), jnp.float32))
+    (acc, _m, l), _ = jax.lax.scan(step, init, (kc, vc, pc),
+                                   unroll=n_chunks if unroll else 1)
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return acc / denom
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  qpos: jax.Array, kpos: jax.Array, *,
+                  window: int | None = None, chunk: int = 2048,
+                  unroll: bool = False) -> jax.Array:
+    """q: (B,Sq,Hq,hd); k,v: (B,Sk,Hkv,hd); returns (B,Sq,Hq,hd).
+
+    ``qpos``/``kpos``: (Sq,)/(Sk,) absolute positions (-1 = invalid slot).
+    ``unroll`` unrolls the KV-chunk scan (dry-run cost-analysis accuracy:
+    XLA counts while bodies once).
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    if Sq == 1 or k.shape[1] <= chunk:
+        out = _block_attn(qg, k, v, qpos, kpos, window)
+    else:
+        out = _chunked_attn(qg, k, v, qpos, kpos, window, chunk, unroll)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)

@@ -1,0 +1,116 @@
+"""The paper's CF system as a launchable architecture family.
+
+Two step kinds (see ``repro/configs/twinsearch_cf.py``):
+
+  * ``build``   — the traditional full similarity build: blocked cosine
+    matmul (S sharded P(data, model), no collectives in the contraction
+    since both operand row-blocks are fetched once) followed by a reshard to
+    row-sharded layout and a local per-row sort.
+  * ``onboard`` — the TwinSearch burst: k new users scanned through
+    probe -> equal-range search -> mask intersect -> bounded verify -> copy,
+    with the traditional matvec+sort as the per-user fallback branch.
+
+At web scale the state is the dominant memory: sim lists shard rows over all
+mesh axes; a new-user onboarding touches O(c·m + c·log n + c·n + s_max·m)
+of it plus two scalar-sized collectives, which is the paper's O(n·m/125)
+against the traditional O(n·m) — per pod, divided by the device count.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CFConfig, ShapeSpec
+from repro.core import twinsearch as ts
+from repro.core.similarity import row_norms
+from repro.core.types import CFState, SENTINEL, set0_cap
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def build_step(R: jax.Array, *, block_spec=None, rows_spec=None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Full build: R (n, m) -> ascending sorted lists (vals f32, idx i32).
+
+    ``block_spec``: PartitionSpec for the (n, n) similarity blocks
+    (typically P('data', 'model')); ``rows_spec``: row-sharded layout for
+    the sort (P(('data','model'), None)).
+    """
+    Rf = R.astype(jnp.float32)
+    norms = jnp.maximum(row_norms(Rf), 1e-12)
+    Rn = (Rf / norms[:, None]).astype(R.dtype)
+    S = jnp.einsum("im,jm->ij", Rn, Rn, preferred_element_type=jnp.float32)
+    S = _constrain(S, block_spec)
+    S = _constrain(S, rows_spec)
+    idx = jnp.argsort(S, axis=-1).astype(jnp.int32)
+    vals = jnp.take_along_axis(S, idx, axis=-1)
+    return vals, idx
+
+
+def onboard_step(state: CFState, R_new: jax.Array, probes: jax.Array,
+                 cfg: CFConfig, unroll: bool = False, rows_spec=None,
+                 mesh_info=None):
+    """TwinSearch burst over the immutable base state (write-buffer
+    formulation); with ``mesh_info=(axes, mesh)`` the shard_map
+    distributed path runs (core.twinsearch_sharded) — the GSPMD gather
+    formulation cannot partition the dynamic row lookups."""
+    n_base = state.capacity
+    s_max = set0_cap(n_base, cfg.set0_divisor, cfg.set0_slack)
+    if mesh_info is not None:
+        from repro.core.twinsearch_sharded import onboard_batch_sharded
+        axes, mesh = mesh_info
+        return onboard_batch_sharded(state, R_new, probes, s_max=s_max,
+                                     axes=axes, mesh=mesh,
+                                     tol=cfg.sim_tol, unroll=unroll)
+    return ts.onboard_batch_buffered(state, R_new, probes, s_max=s_max,
+                                     tol=cfg.sim_tol, unroll=unroll,
+                                     rows_spec=rows_spec)
+
+
+def onboard_traditional_step(state: CFState, R_new: jax.Array):
+    """The baseline burst (every user through compute-all + sort)."""
+    from repro.core import baseline
+    state2 = baseline.onboard_batch_traditional(state, R_new)
+    k = R_new.shape[0]
+    rows = (state.capacity - k) + jnp.arange(k, dtype=jnp.int32)
+    return state2.sim_vals[rows], state2.sim_idx[rows]
+
+
+def state_structs(n_base: int, m: int, k: int,
+                  ratings_dtype=jnp.bfloat16) -> CFState:
+    """ShapeDtypeStruct stand-in CFState with capacity n_base + k."""
+    N = n_base + k
+    return CFState(
+        ratings=jax.ShapeDtypeStruct((N, m), ratings_dtype),
+        norms=jax.ShapeDtypeStruct((N,), jnp.float32),
+        sim_vals=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        sim_idx=jax.ShapeDtypeStruct((N, N), jnp.int32),
+        n_active=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def input_structs(cfg: CFConfig, shape: ShapeSpec) -> dict[str, Any]:
+    from repro.configs.base import pad_to_shard
+    n, m = shape.dim("n_users"), shape.dim("n_items")
+    if cfg.mode == "item":
+        n, m = m, n
+    if shape.kind == "build":
+        # Row count pads to the shard boundary (zero rows sort harmlessly;
+        # benches at exact scale run unsharded).
+        return {"R": jax.ShapeDtypeStruct((pad_to_shard(n), m),
+                                          jnp.bfloat16)}
+    if shape.kind == "onboard":
+        k = shape.dim("k_new")
+        n_base = pad_to_shard(n)
+        return {
+            "state": state_structs(n_base, m, 0),
+            "R_new": jax.ShapeDtypeStruct((k, m), jnp.bfloat16),
+            "probes": jax.ShapeDtypeStruct((k, cfg.c_probes), jnp.int32),
+        }
+    raise ValueError(f"unknown CF shape kind {shape.kind}")

@@ -1,0 +1,70 @@
+"""Sharded sparse-embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag or CSR sparse; per the assignment this is
+built as part of the system: one concatenated table per model (fields laid
+out back-to-back with static offsets), plain ``jnp.take`` for one-hot
+fields, and gather + masked-sum (``segment_sum`` for the ragged variant) for
+multi-hot bags.  Table rows shard over *all* mesh axes
+(P(('pod','data','model'), None)) — tables dominate recsys memory and this
+is the row-wise sharding production parameter servers use; GSPMD partitions
+the gathers and the scatter-add gradients.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+
+def field_offsets(vocab_sizes: tuple[int, ...]) -> np.ndarray:
+    """Static start offset of each field inside the concatenated table."""
+    return np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+
+
+def init_table(key: jax.Array, vocab_sizes: tuple[int, ...], dim: int,
+               dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    """Rows padded to the 512 shard boundary (see configs.base.pad_to_shard)
+    so row-sharding over any mesh-axis subset divides evenly."""
+    from repro.configs.base import pad_to_shard
+    total = pad_to_shard(int(sum(vocab_sizes)))
+    return normal_init(key, (total, dim), scale or dim ** -0.5, dtype)
+
+
+def lookup(table: jax.Array, idx: jax.Array,
+           offsets: np.ndarray) -> jax.Array:
+    """One-hot fields: idx (..., F) of per-field ids -> (..., F, dim)."""
+    flat = idx + jnp.asarray(offsets, idx.dtype)
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, mask: jax.Array,
+                  offsets: np.ndarray | None = None,
+                  combiner: str = "sum") -> jax.Array:
+    """Multi-hot bags: idx (..., F, H) with validity ``mask`` -> (..., F, dim).
+
+    gather + masked reduce == torch ``nn.EmbeddingBag`` semantics.
+    """
+    if offsets is not None:
+        idx = idx + jnp.asarray(offsets, idx.dtype)[..., :, None]
+    emb = jnp.take(table, idx, axis=0)                    # (..., F, H, dim)
+    m = mask.astype(emb.dtype)[..., None]
+    s = jnp.sum(emb * m, axis=-2)
+    if combiner == "sum":
+        return s
+    if combiner == "mean":
+        return s / jnp.maximum(jnp.sum(m, axis=-2), 1.0)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def embedding_bag_ragged(table: jax.Array, flat_idx: jax.Array,
+                         segment_ids: jax.Array, n_bags: int,
+                         weights: jax.Array | None = None) -> jax.Array:
+    """CSR-style ragged bags: flat_idx (T,), segment_ids (T,) -> (n_bags, dim)
+    via gather + ``segment_sum`` (the jax-native EmbeddingBag)."""
+    emb = jnp.take(table, flat_idx, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None].astype(emb.dtype)
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=n_bags)

@@ -1,0 +1,107 @@
+"""Edge-parallel full-graph GAT under ``shard_map``.
+
+Baseline (§Perf Cell B): with edges sharded over all axes and node tensors
+replicated, GSPMD resolves the segment-scatter by all-gathering the
+(E, H, F') message tensor — 16.5GB/device on ogbn-products, 20GB temp,
+useful fraction 0.01.  The explicit formulation keeps messages local to
+their edge shard and combines node aggregates with psums:
+
+  per shard:  e_loc = LeakyReLU(a_src·Wh[src_loc] + a_dst·Wh[dst_loc])
+              m     = pmax(segment_max(e_loc))            (N, H)
+              Z     = psum(segment_sum(exp(e_loc − m)))   (N, H)
+              out   = psum(segment_sum(alpha · Wh[src_loc]))  (N, H, F')
+
+Node projections are computed replicated (N·d·H·F' flops ≈ 31 GFLOP on
+products — negligible against the removed 16.5GB of traffic); per-layer
+collective traffic drops to ~780MB of (N, H(·F')) psums.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import GNNConfig
+
+
+class GNNEPInfo(NamedTuple):
+    axes: tuple[str, ...]        # all mesh axes (edge sharding + psums)
+    mesh: object = None
+
+
+def _pmax_sg(x, axes):
+    """pmax with stop-gradient semantics (pmax lacks a JVP rule; the max
+    only stabilises the softmax, so a zero tangent is exact)."""
+    @jax.custom_jvp
+    def f(v):
+        return jax.lax.pmax(v, axes)
+
+    @f.defjvp
+    def _jvp(primals, tangents):
+        out = f(primals[0])
+        return out, jnp.zeros_like(out)
+
+    return f(x)
+
+
+def _gat_layer_local(x, src, dst, lp, n_heads, negative_slope, concat,
+                     axes):
+    N = x.shape[0]
+    Wh = jnp.einsum("nf,fo->no", x, lp["W"].astype(x.dtype))
+    Wh = Wh.reshape(N, n_heads, -1)
+    e_src = jnp.einsum("nhf,hf->nh", Wh, lp["a_src"].astype(x.dtype))
+    e_dst = jnp.einsum("nhf,hf->nh", Wh, lp["a_dst"].astype(x.dtype))
+    e = jax.nn.leaky_relu(e_src[src] + e_dst[dst], negative_slope)
+    e = e.astype(jnp.float32)
+
+    m_loc = jax.ops.segment_max(e, dst, num_segments=N)
+    m = _pmax_sg(jnp.where(jnp.isfinite(m_loc), m_loc, -1e30), axes)
+    m = jnp.where(m > -1e29, jax.lax.stop_gradient(m), 0.0)
+    ex = jnp.exp(e - m[dst])
+    denom = jax.lax.psum(jax.ops.segment_sum(ex, dst, num_segments=N),
+                         axes)
+    alpha = (ex / jnp.maximum(denom[dst], 1e-16)).astype(x.dtype)
+    msgs = Wh[src] * alpha[..., None]
+    out = jax.lax.psum(
+        jax.ops.segment_sum(msgs.astype(jnp.float32), dst,
+                            num_segments=N), axes).astype(x.dtype)
+    if concat:
+        return out.reshape(N, -1)
+    return jnp.mean(out, axis=1)
+
+
+def forward_segment_ep(params: dict, feats: jax.Array, edge_src: jax.Array,
+                       edge_dst: jax.Array, cfg: GNNConfig,
+                       info: GNNEPInfo) -> jax.Array:
+    """(N, d) replicated feats + edge lists sharded over every axis ->
+    (N, n_classes) replicated logits."""
+
+    def local(feats, src, dst, p):
+        # remat each layer: the replicated (N, H·F') node tensors dominate
+        # per-device memory; recomputing them in the backward halves the
+        # simultaneous-liveness set (§Perf Cell B iteration 2).
+        layer = jax.checkpoint(
+            lambda x, lp, concat: _gat_layer_local(
+                x, src, dst, lp, cfg.n_heads, cfg.negative_slope, concat,
+                info.axes), static_argnums=(2,),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        h = jax.nn.elu(layer(feats, p["l1"], True))
+        return layer(h, p["l2"], False)
+
+    return jax.shard_map(
+        local,
+        mesh=info.mesh,
+        in_specs=(P(None, None), P(info.axes), P(info.axes),
+                  jax.tree.map(lambda _: P(None, None), params)),
+        out_specs=P(None, None),
+        check_vma=False,
+    )(feats, edge_src, edge_dst, params)
+
+
+def loss_full_ep(params, batch, cfg: GNNConfig, info: GNNEPInfo):
+    from repro.models.gnn import node_xent
+    logits = forward_segment_ep(params, batch["feats"], batch["edge_src"],
+                                batch["edge_dst"], cfg, info)
+    return node_xent(logits, batch["labels"], batch["mask"])

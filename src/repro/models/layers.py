@@ -1,0 +1,100 @@
+"""Shared neural-net building blocks (pure JAX, params as pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+          ) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "leaky_relu": jax.nn.leaky_relu,
+    }[name]
+
+
+def glu_ffn(x: jax.Array, w_in: jax.Array, w_out: jax.Array,
+            act: str) -> jax.Array:
+    """Gated FFN: w_in packs [gate | up] along its last axis."""
+    gu = jnp.einsum("...d,df->...f", x, w_in.astype(x.dtype))
+    gate, up = jnp.split(gu, 2, axis=-1)
+    inner = {"swiglu": jax.nn.silu, "geglu":
+             lambda v: jax.nn.gelu(v, approximate=True)}[act](gate) * up
+    return jnp.einsum("...f,fd->...d", inner, w_out.astype(x.dtype))
+
+
+def dense_ffn(x: jax.Array, w_in: jax.Array, w_out: jax.Array,
+              act: str = "gelu") -> jax.Array:
+    h = act_fn(act)(jnp.einsum("...d,df->...f", x, w_in.astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", h, w_out.astype(x.dtype))
+
+
+def ffn(x: jax.Array, w_in: jax.Array, w_out: jax.Array, act: str
+        ) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        return glu_ffn(x, w_in, w_out, act)
+    return dense_ffn(x, w_in, w_out, act)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key: jax.Array, shape: tuple[int, ...], scale: float,
+                dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fan_in_init(key: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return normal_init(key, shape, fan_in ** -0.5, dtype)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN with grouped scatter dispatch.
+
+Tokens are split into groups (sharded over the data axes); within each group
+every token's top-k expert choices get a slot in a per-(group, expert)
+capacity buffer via a cumsum rank, and dispatch/combine are gather/scatter —
+O(T·k·d) data movement — rather than GShard's one-hot dispatch einsum, which
+costs O(T·E·C·d) FLOPs and is a non-starter at E=64.  The (G, E, C, d)
+buffer shards (G → data axes, E → model axis), so the dp↔model traffic GSPMD
+inserts around the scatter/gather *is* the classic MoE all-to-all pair.
+
+Expert compute is a single batched einsum over the (E-sharded) expert stack.
+Aux load-balance loss follows Switch (E · Σ_e f_e · p_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import ffn
+
+
+def _capacity(group_size: int, cfg: MoEConfig) -> int:
+    c = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)        # round up to 8
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_in: jax.Array,
+            w_out: jax.Array, shared: tuple[jax.Array, jax.Array] | None,
+            cfg: MoEConfig, act: str, *, group_size: int = 4096,
+            tokens_spec=None, experts_spec=None
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    router_w: (d, E); w_in: (E, d, F·glu); w_out: (E, F, d);
+    shared: optional (w_in_sh, w_out_sh) always-on expert.
+
+    ``tokens_spec`` (P(dp, None, None)) pins token groups and the dispatch
+    buffer to the data axes so the capacity scatter is shard-local — without
+    it GSPMD replicates the (G, E, C, d) buffer over the model axis and
+    all-reduces it (measured: ~60x the intrinsic all-to-all traffic).
+    ``experts_spec`` (P(dp, mp, None, None)) shards the expert outputs on E
+    so the combine gather is the only cross-axis exchange (the MoE
+    all-to-all analogue under GSPMD).
+    """
+    B, S, d = x.shape
+    E, k, = cfg.n_experts, cfg.top_k
+    T = B * S
+    gs = min(group_size, T)
+    G = T // gs
+    assert G * gs == T, (T, gs)
+    C = _capacity(gs, cfg)
+
+    xt = _constrain(x.reshape(G, gs, d), tokens_spec)
+    logits = jnp.einsum("gtd,de->gte", xt, router_w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (G, gs, E) fp32
+    gates, eidx = jax.lax.top_k(probs, k)                # (G, gs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # Slot assignment: rank of each (token, choice) within its expert, in
+    # token-major order (GShard priority), via a cumsum over the group.
+    onehot = jax.nn.one_hot(eidx.reshape(G, gs * k), E, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=1) - 1               # (G, gs·k, E)
+    pos = jnp.sum(ranks * onehot, axis=-1)               # (G, gs·k)
+    eflat = eidx.reshape(G, gs * k)
+    valid = pos < C
+    # Dropped (over-capacity) choices clamp to the last slot with a zeroed
+    # contribution — no ragged +1 bin, so every buffer dim stays divisible
+    # by the expert (model-axis) sharding.
+    slot = jnp.where(valid, eflat * C + jnp.minimum(pos, C - 1), E * C - 1)
+
+    # Dispatch: scatter token activations into (G, E·C, d).
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None]
+    xk = jnp.repeat(xt, k, axis=1) * valid[..., None].astype(x.dtype)
+    buf = jnp.zeros((G, E * C, d), x.dtype).at[gi, slot].add(xk)
+    buf = _constrain(buf, tokens_spec)                   # shard-local scatter
+    buf = buf.reshape(G, E, C, d)
+
+    # Expert compute (E shards over the model axis).
+    if act in ("swiglu", "geglu"):
+        gu = jnp.einsum("gecd,edf->gecf", buf, w_in.astype(x.dtype))
+        gate_h, up = jnp.split(gu, 2, axis=-1)
+        inner = {"swiglu": jax.nn.silu,
+                 "geglu": lambda v: jax.nn.gelu(v, approximate=True)}[act](
+                     gate_h) * up
+    else:
+        inner = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf,
+                                       w_in.astype(x.dtype)))
+    inner = _constrain(inner, experts_spec)
+    out_buf = jnp.einsum("gecf,efd->gecd", inner, w_out.astype(x.dtype))
+    out_buf = _constrain(out_buf, experts_spec)
+    out_buf = out_buf.reshape(G, E * C, d)
+
+    # Combine: gather each choice's output, weight by its gate (dropped
+    # choices carry weight 0, so the clamped slot's garbage never lands).
+    yk = _constrain(out_buf[gi, slot], tokens_spec)      # (G, gs·k, d)
+    w = (gates.reshape(G, gs * k) * valid).astype(x.dtype)
+    y = jnp.sum(yk.reshape(G, gs, k, d) * w.reshape(G, gs, k, 1), axis=2)
+    y = y.reshape(B, S, d)
+
+    if shared is not None:
+        y = y + ffn(x, shared[0], shared[1], act)
+
+    # Switch load-balance aux: E · mean_e(f_e · p_e).
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32),
+                            axis=2), axis=(0, 1))        # (E,) token fracs /k
+    prob = jnp.mean(probs, axis=(0, 1))                  # (E,)
+    aux = E * jnp.sum(frac / k * prob)
+    return y, aux

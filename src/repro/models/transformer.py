@@ -1,0 +1,438 @@
+"""Decoder-only LM family: dense + MoE, GQA/MQA, sliding-window/global mix.
+
+Design points (see DESIGN.md §5):
+  * layer params are stacked (L, ...) and the block runs under
+    ``lax.scan`` (+ ``jax.checkpoint``) so HLO size, compile time and
+    activation memory stay O(1) in depth;
+  * per-layer attention windows are data (an (L,) int32 vector: W for local
+    layers, a huge sentinel for global ones) so the local/global mix runs
+    through one scanned block;
+  * the LM head loss is computed in sequence chunks under an inner scan so
+    the (B, S, V) logits tensor never materialises (vocab up to 262k);
+  * decode is an unrolled layer loop with a ring-buffer cache (size W) for
+    local layers and a full cache for global layers;
+  * optional ``with_sharding_constraint`` hooks thread the activation
+    sharding plan through without making the model depend on a mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models.attention import gqa_attention
+from repro.models.layers import (apply_rope, fan_in_init, ffn, normal_init,
+                                 rms_norm)
+from repro.models.moe import moe_ffn
+from repro.models.moe_ep import moe_ffn_ep
+
+GLOBAL_WINDOW = 1 << 30
+
+
+class LMShardingHooks(NamedTuple):
+    """PartitionSpecs applied via with_sharding_constraint (None = no-op)."""
+
+    acts: Any = None        # (B, S, d) between blocks
+    logits: Any = None      # (B, chunk, V) inside the loss scan
+    moe_tokens: Any = None  # (G, gs, d) token groups + dispatch buffer
+    moe_experts: Any = None  # (G, E, C, f) expert-sharded buffers
+    moe_ep: Any = None      # MoEEPInfo -> shard_map expert parallelism
+
+
+def _constrain(x: jax.Array, spec) -> jax.Array:
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def is_global_layer(cfg: LMConfig, layer: int) -> bool:
+    if cfg.window is None:
+        return True
+    if cfg.global_every is None:
+        return False
+    return (layer + 1) % cfg.global_every == 0
+
+
+def layer_windows(cfg: LMConfig) -> jnp.ndarray:
+    """(L,) int32 attention window per layer (sentinel = global)."""
+    return jnp.asarray(
+        [GLOBAL_WINDOW if is_global_layer(cfg, l) else cfg.window
+         for l in range(cfg.n_layers)], jnp.int32)
+
+
+def _glu_factor(cfg: LMConfig) -> int:
+    return 2 if cfg.act in ("swiglu", "geglu") else 1
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: LMConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, L = cfg.d_model, cfg.n_layers
+    gf = _glu_factor(cfg)
+    ks = jax.random.split(key, 16)
+    layers: dict[str, jax.Array] = {
+        "attn_norm": jnp.zeros((L, d), dt),
+        "mlp_norm": jnp.zeros((L, d), dt),
+        "wq": fan_in_init(ks[0], (L, d, cfg.q_dim), dt),
+        "wk": fan_in_init(ks[1], (L, d, cfg.kv_dim), dt),
+        "wv": fan_in_init(ks[2], (L, d, cfg.kv_dim), dt),
+        "wo": normal_init(ks[3], (L, cfg.q_dim, d),
+                          (cfg.q_dim ** -0.5) / (2 * L) ** 0.5, dt),
+    }
+    if cfg.moe is not None:
+        m = cfg.moe
+        layers["router"] = normal_init(ks[4], (L, d, m.n_experts),
+                                       d ** -0.5, jnp.float32)
+        layers["w_in_e"] = fan_in_init(
+            ks[5], (L, m.n_experts, d, gf * m.d_ff_expert), dt)
+        layers["w_out_e"] = normal_init(
+            ks[6], (L, m.n_experts, m.d_ff_expert, d),
+            (m.d_ff_expert ** -0.5) / (2 * L) ** 0.5, dt)
+        if m.n_shared:
+            layers["w_in_sh"] = fan_in_init(
+                ks[7], (L, d, gf * m.n_shared * m.d_ff_expert), dt)
+            layers["w_out_sh"] = normal_init(
+                ks[8], (L, m.n_shared * m.d_ff_expert, d),
+                (m.d_ff_expert ** -0.5) / (2 * L) ** 0.5, dt)
+    else:
+        layers["w_in"] = fan_in_init(ks[5], (L, d, gf * cfg.d_ff), dt)
+        layers["w_out"] = normal_init(ks[6], (L, cfg.d_ff, d),
+                                      (cfg.d_ff ** -0.5) / (2 * L) ** 0.5, dt)
+    params = {
+        "embed": normal_init(ks[9], (cfg.vocab_size, d), 1.0, dt),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = fan_in_init(ks[10], (d, cfg.vocab_size), dt)
+    return params
+
+
+def param_structs(cfg: LMConfig):
+    """ShapeDtypeStruct pytree of the params (no allocation) — dry-run."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward
+# ---------------------------------------------------------------------------
+
+def _attention_sublayer(x: jax.Array, lp: dict, cfg: LMConfig,
+                        positions: jax.Array, win,
+                        unroll: bool = False) -> jax.Array:
+    B, S, d = x.shape
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dq->bsq", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dq->bsq", h, lp["wv"].astype(h.dtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = gqa_attention(q, k, v, positions, positions, window=win,
+                        unroll=unroll)
+    out = out.reshape(B, S, cfg.q_dim)
+    return jnp.einsum("bsq,qd->bsd", out, lp["wo"].astype(out.dtype))
+
+
+def _ffn_sublayer(x: jax.Array, lp: dict, cfg: LMConfig,
+                  hooks: LMShardingHooks = LMShardingHooks()
+                  ) -> tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        shared = ((lp["w_in_sh"], lp["w_out_sh"])
+                  if cfg.moe.n_shared else None)
+        if hooks.moe_ep is not None:
+            y, aux = moe_ffn_ep(h, lp["router"], lp["w_in_e"],
+                                lp["w_out_e"], cfg.moe, cfg.act,
+                                hooks.moe_ep)
+            if shared is not None:
+                y = y + ffn(h, shared[0], shared[1], cfg.act)
+            return y, aux
+        return moe_ffn(h, lp["router"], lp["w_in_e"], lp["w_out_e"], shared,
+                       cfg.moe, cfg.act, tokens_spec=hooks.moe_tokens,
+                       experts_spec=hooks.moe_experts)
+    return ffn(h, lp["w_in"], lp["w_out"], cfg.act), jnp.float32(0.0)
+
+
+def _block(x: jax.Array, lp: dict, win, cfg: LMConfig,
+           positions: jax.Array, hooks: LMShardingHooks,
+           unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    x = x + _attention_sublayer(x, lp, cfg, positions, win, unroll)
+    y, aux = _ffn_sublayer(x, lp, cfg, hooks)
+    x = _constrain(x + y, hooks.acts)
+    return x, aux
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: LMConfig
+                 ) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig,
+            hooks: LMShardingHooks = LMShardingHooks(),
+            unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (hidden (B, S, d) pre-final-norm, mean aux loss).
+
+    ``unroll`` fully unrolls the layer scan (and inner chunk scans) so the
+    dry-run's cost analysis and collective census see every iteration (XLA
+    counts while bodies once)."""
+    S = tokens.shape[1]
+    x = _constrain(embed_tokens(params, tokens, cfg), hooks.acts)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    wins = layer_windows(cfg)
+
+    block = partial(_block, cfg=cfg, positions=positions, hooks=hooks,
+                    unroll=unroll)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, xs):
+        lp, win = xs
+        return block(carry, lp, win)
+
+    x, auxs = jax.lax.scan(body, x, (params["layers"], wins),
+                           unroll=cfg.n_layers if unroll else 1)
+    return x, jnp.mean(auxs)
+
+
+def unembed_weight(params: dict, cfg: LMConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def lm_loss(params: dict, tokens: jax.Array, cfg: LMConfig,
+            hooks: LMShardingHooks = LMShardingHooks(),
+            loss_chunk: int = 512, unroll: bool = False) -> jax.Array:
+    """Next-token cross entropy, computed in sequence chunks so the full
+    (B, S, V) logits tensor never exists."""
+    B, S = tokens.shape
+    h, aux = forward(params, tokens, cfg, hooks, unroll)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    W = unembed_weight(params, cfg)
+
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = (jnp.arange(S) < S - 1).astype(jnp.float32)[None, :]
+
+    cs = min(loss_chunk, S)
+    n_chunks = S // cs
+    assert n_chunks * cs == S
+    hc = h.reshape(B, n_chunks, cs, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, cs).transpose(1, 0, 2)
+    mc = mask.reshape(1, n_chunks, cs).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xs):
+        hcj, lcj, mcj = xs
+        logits = jnp.einsum("bsd,dv->bsv", hcj, W.astype(hcj.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = _constrain(logits, hooks.logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lcj[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return carry + jnp.sum((lse - gold) * mcj), ()
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, lc, mc),
+                            unroll=n_chunks if unroll else 1)
+    loss = total / jnp.maximum(jnp.sum(mask) * B, 1.0)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _global_local_split(cfg: LMConfig) -> tuple[list[int], list[int]]:
+    g = [l for l in range(cfg.n_layers) if is_global_layer(cfg, l)]
+    loc = [l for l in range(cfg.n_layers) if not is_global_layer(cfg, l)]
+    return g, loc
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Decode-cache pytree: full (S_max) cache for global layers, ring
+    buffer (W) for local layers, plus the ring's written-position vector."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    g, loc = _global_local_split(cfg)
+    cache = {
+        "kg": jnp.zeros((len(g), batch, max_len, cfg.n_kv_heads,
+                         cfg.head_dim), dt),
+        "vg": jnp.zeros((len(g), batch, max_len, cfg.n_kv_heads,
+                         cfg.head_dim), dt),
+    }
+    if loc:
+        W = cfg.window
+        cache["kl"] = jnp.zeros((len(loc), batch, W, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)
+        cache["vl"] = jnp.zeros((len(loc), batch, W, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)
+        cache["ring_pos"] = jnp.full((W,), -1, jnp.int32)
+    return cache
+
+
+def cache_structs(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig,
+            hooks: LMShardingHooks = LMShardingHooks(),
+            unroll: bool = False) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also returns the decode cache.
+    Returns (last-position logits (B, V), cache)."""
+    B, S = tokens.shape
+    x = _constrain(embed_tokens(params, tokens, cfg), hooks.acts)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    wins = layer_windows(cfg)
+
+    def body(carry, xs):
+        lp, win = xs
+        h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+        k = jnp.einsum("bsd,dq->bsq", h, lp["wk"].astype(h.dtype)).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,dq->bsq", h, lp["wv"].astype(h.dtype)).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q = jnp.einsum("bsd,dq->bsq", h, lp["wq"].astype(h.dtype)).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        out = gqa_attention(q, k, v, positions, positions, window=win,
+                            unroll=unroll)
+        x1 = carry + jnp.einsum("bsq,qd->bsd",
+                                out.reshape(B, S, cfg.q_dim),
+                                lp["wo"].astype(out.dtype))
+        y, _aux = _ffn_sublayer(x1, lp, cfg, hooks)
+        return _constrain(x1 + y, hooks.acts), (k, v)
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (k_all, v_all) = jax.lax.scan(body_fn, x, (params["layers"], wins),
+                                     unroll=cfg.n_layers if unroll else 1)
+
+    g, loc = _global_local_split(cfg)
+    gidx = jnp.asarray(g, jnp.int32)
+    cache = {"kg": k_all[gidx], "vg": v_all[gidx]}
+    if loc:
+        W = cfg.window
+        lidx = jnp.asarray(loc, jnp.int32)
+        pos_tail = jnp.arange(S - W, S, dtype=jnp.int32)
+        slots = pos_tail % W
+        ring_k = jnp.zeros((len(loc), B, W, cfg.n_kv_heads, cfg.head_dim),
+                           k_all.dtype).at[:, :, slots].set(
+            k_all[lidx][:, :, pos_tail])
+        ring_v = jnp.zeros_like(ring_k).at[:, :, slots].set(
+            v_all[lidx][:, :, pos_tail])
+        cache.update(kl=ring_k, vl=ring_v,
+                     ring_pos=jnp.zeros((W,), jnp.int32).at[slots].set(
+                         pos_tail))
+    h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h_last,
+                        unembed_weight(params, cfg).astype(h_last.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, cfg: LMConfig,
+                hooks: LMShardingHooks = LMShardingHooks()
+                ) -> tuple[jax.Array, dict]:
+    """One new token per sequence against the cache.
+
+    tokens: (B, 1) int32; pos: () int32 — the position being written.
+    Returns (logits (B, V), updated cache).  Layers are unrolled (decode HLO
+    is tiny per layer; per-layer cache shapes differ local vs global).
+    """
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)                # (B, 1, d)
+    qpos = pos[None].astype(jnp.int32)
+    g, loc = _global_local_split(cfg)
+    g_of = {l: i for i, l in enumerate(g)}
+    l_of = {l: i for i, l in enumerate(loc)}
+    cache = dict(cache)
+    S_max = cache["kg"].shape[2]
+    if loc:
+        W = cfg.window
+        ring_pos = cache["ring_pos"].at[pos % W].set(pos)
+        cache["ring_pos"] = ring_pos
+
+    for l in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, lp["wq"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        k = jnp.einsum("bsd,dq->bsq", h, lp["wk"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,dq->bsq", h, lp["wv"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+        if is_global_layer(cfg, l):
+            i = g_of[l]
+            kg = jax.lax.dynamic_update_slice(
+                cache["kg"], k[None].astype(cache["kg"].dtype),
+                (i, 0, pos, 0, 0))
+            vg = jax.lax.dynamic_update_slice(
+                cache["vg"], v[None].astype(cache["vg"].dtype),
+                (i, 0, pos, 0, 0))
+            cache["kg"], cache["vg"] = kg, vg
+            kpos = jnp.arange(S_max, dtype=jnp.int32)
+            out = gqa_attention(q, kg[i], vg[i], qpos, kpos, window=None)
+        else:
+            i = l_of[l]
+            slot = pos % W
+            kl = jax.lax.dynamic_update_slice(
+                cache["kl"], k[None].astype(cache["kl"].dtype),
+                (i, 0, slot, 0, 0))
+            vl = jax.lax.dynamic_update_slice(
+                cache["vl"], v[None].astype(cache["vl"].dtype),
+                (i, 0, slot, 0, 0))
+            cache["kl"], cache["vl"] = kl, vl
+            out = gqa_attention(q, kl[i], vl[i], qpos, ring_pos,
+                                window=cfg.window)
+        x = x + jnp.einsum("bsq,qd->bsd", out.reshape(B, 1, cfg.q_dim),
+                           lp["wo"].astype(out.dtype))
+        y, _aux = _ffn_sublayer(x, lp, cfg)
+        x = x + y
+
+    h_last = rms_norm(x[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h_last,
+                        unembed_weight(params, cfg).astype(h_last.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input builders
+# ---------------------------------------------------------------------------
+
+def input_structs(cfg: LMConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B = shape.dim("global_batch")
+    S = shape.dim("seq_len")
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        return {
+            "cache": cache_structs(cfg, B, S),
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(f"unknown LM shape kind {shape.kind}")

@@ -1,0 +1,6 @@
+from repro.serving.cf_server import CFServer, ServerStats
+from repro.serving.dedup import DedupPlan, dedup_batch, fan_out, prompt_hash
+from repro.serving.lm_server import LMServer
+
+__all__ = ["CFServer", "ServerStats", "DedupPlan", "dedup_batch", "fan_out",
+           "prompt_hash", "LMServer"]

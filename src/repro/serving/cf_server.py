@@ -1,0 +1,127 @@
+"""Neighbourhood-CF recommendation server with the paper's TwinSearch
+new-user onboarding fast path.
+
+Request surface (what a real deployment fronts with an RPC layer):
+
+  * ``onboard_user(ratings)``   — TwinSearch -> copy, or traditional build
+                                  fallback; returns the new user id + stats.
+  * ``recommend(user, n)``      — top-n unseen items via kNN scores.
+  * ``predict(user, item)``     — kNN weighted-average rating.
+  * ``add_rating(user, item, r)``— incremental (Papagelis-style) update of
+                                  the affected similarity row.
+
+State is the fixed-capacity ``CFState`` (jit-friendly); all mutating ops
+are jitted once and reused.  ``stats`` tracks twin hits / fallbacks /
+latencies — the serving-side visibility the benchmarks read.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CFState, build_state, knn, set0_cap)
+from repro.core import baseline as base_lib
+from repro.core import twinsearch as ts
+from repro.core import update as upd_lib
+
+
+@dataclass
+class ServerStats:
+    onboarded: int = 0
+    twin_hits: int = 0
+    fallbacks: int = 0
+    overflows: int = 0
+    onboard_ms: list[float] = field(default_factory=list)
+
+    def summary(self) -> dict:
+        ms = sorted(self.onboard_ms) or [0.0]
+        return {
+            "onboarded": self.onboarded,
+            "twin_hits": self.twin_hits,
+            "fallbacks": self.fallbacks,
+            "overflows": self.overflows,
+            "onboard_p50_ms": ms[len(ms) // 2],
+            "onboard_p99_ms": ms[min(len(ms) - 1, int(len(ms) * 0.99))],
+        }
+
+
+class CFServer:
+    def __init__(self, ratings: np.ndarray, *, capacity_extra: int = 64,
+                 c_probes: int = 8, sim_tol: float = 1e-6,
+                 measure: str = "cosine", seed: int = 0):
+        self.n_base = int(ratings.shape[0])
+        self.k_cap = int(capacity_extra)
+        self.c = c_probes
+        self.tol = sim_tol
+        self.s_max = set0_cap(self.n_base)
+        self.state: CFState = jax.jit(
+            lambda R: build_state(R, capacity_extra=capacity_extra,
+                                  measure=measure))(jnp.asarray(
+                                      ratings, jnp.float32))
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = ServerStats()
+
+        self._onboard = jax.jit(lambda st, r0, probes: ts.onboard_twinsearch(
+            st, r0, probes, s_max=self.s_max, n_base=self.n_base,
+            k_cap=self.k_cap, tol=self.tol))
+        self._onboard_trad = jax.jit(base_lib.onboard_traditional)
+        self._recommend = jax.jit(knn.recommend,
+                                  static_argnames=("k_neighbors", "n_rec"))
+        self._predict = jax.jit(knn.predict, static_argnames=("k",))
+        self._cache = None
+
+    # -- onboarding ---------------------------------------------------------
+
+    def onboard_user(self, ratings: np.ndarray, *,
+                     use_twinsearch: bool = True) -> tuple[int, dict]:
+        if int(self.state.n_active) >= self.state.capacity:
+            raise RuntimeError("capacity exhausted; grow the state "
+                               "(production: rotate to a larger arena)")
+        r0 = jnp.asarray(ratings, jnp.float32)
+        t0 = time.perf_counter()
+        if use_twinsearch:
+            self._key, sub = jax.random.split(self._key)
+            probes = jax.random.randint(sub, (self.c,), 0, self.n_base)
+            new_state, res = self._onboard(self.state, r0, probes)
+            found = bool(res.found)
+            self.stats.twin_hits += found
+            self.stats.fallbacks += not found
+            self.stats.overflows += bool(res.overflowed)
+        else:
+            new_state = self._onboard_trad(self.state, r0)
+            self.stats.fallbacks += 1
+            found = False
+        new_state.n_active.block_until_ready()
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.state = new_state
+        self.stats.onboarded += 1
+        self.stats.onboard_ms.append(dt_ms)
+        uid = int(self.state.n_active) - 1
+        return uid, {"twin_found": found, "ms": dt_ms}
+
+    # -- queries ------------------------------------------------------------
+
+    def recommend(self, user: int, n: int = 10,
+                  k_neighbors: int = 20) -> list[tuple[int, float]]:
+        scores, items = self._recommend(self.state, jnp.int32(user),
+                                        k_neighbors=k_neighbors, n_rec=n)
+        return [(int(i), float(s)) for s, i in zip(scores, items)]
+
+    def predict(self, user: int, item: int, k: int = 20) -> float:
+        return float(self._predict(self.state, jnp.int32(user),
+                                   jnp.int32(item), k=k))
+
+    # -- maintenance --------------------------------------------------------
+
+    def add_rating(self, user: int, item: int, rating: float) -> None:
+        if self._cache is None:
+            self._cache = jax.jit(upd_lib.init_cache)(self.state.ratings)
+            self._add = jax.jit(upd_lib.add_rating)
+        self.state, self._cache = self._add(
+            self.state, self._cache, jnp.int32(user), jnp.int32(item),
+            jnp.float32(rating))

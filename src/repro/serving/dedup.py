@@ -1,0 +1,70 @@
+"""Twin-request dedup for LM serving — the paper's insight transplanted
+(beyond-paper, DESIGN.md §4).
+
+TwinSearch's structure is probe -> candidate set -> exact verify -> copy.
+The serving analogue: requests with identical token prefixes ("twin
+prompts") share prefill compute.  Probe = cheap rolling hash of the token
+ids; candidate set = hash-bucket collisions; verify = exact token
+comparison; copy = reuse the computed KV cache / logits.
+
+This is the batching-layer component: ``dedup_batch`` collapses a request
+batch to its unique programs and returns the scatter map to fan results
+back out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+_P1 = np.uint64(1099511628211)
+_OFF = np.uint64(14695981039346656037)
+
+
+def prompt_hash(tokens: np.ndarray) -> np.ndarray:
+    """(B, S) -> (B,) FNV-1a over token ids (the probe step)."""
+    h = np.full(tokens.shape[0], _OFF, np.uint64)
+    for t in range(tokens.shape[1]):
+        h = (h ^ tokens[:, t].astype(np.uint64)) * _P1
+    return h
+
+
+@dataclass
+class DedupPlan:
+    unique_rows: np.ndarray          # (U,) indices into the original batch
+    scatter: np.ndarray              # (B,) position of each request's twin
+    n_unique: int
+
+    @property
+    def savings(self) -> float:
+        return 1.0 - self.n_unique / max(len(self.scatter), 1)
+
+
+def dedup_batch(tokens: np.ndarray) -> DedupPlan:
+    """Collapse identical prompts: hash-probe, then exact verify within
+    buckets (hash collisions never cause wrong sharing)."""
+    B = tokens.shape[0]
+    hashes = prompt_hash(tokens)
+    first_of: dict = {}
+    unique_rows: list[int] = []
+    scatter = np.zeros(B, np.int64)
+    for i in range(B):
+        bucket = first_of.setdefault(int(hashes[i]), [])
+        hit = -1
+        for u in bucket:                      # exact verify (Relationship 2)
+            if np.array_equal(tokens[i], tokens[unique_rows[u]]):
+                hit = u
+                break
+        if hit < 0:
+            hit = len(unique_rows)
+            unique_rows.append(i)
+            bucket.append(hit)
+        scatter[i] = hit
+    return DedupPlan(unique_rows=np.asarray(unique_rows, np.int64),
+                     scatter=scatter, n_unique=len(unique_rows))
+
+
+def fan_out(unique_results: np.ndarray, plan: DedupPlan) -> np.ndarray:
+    """Scatter the unique computations back to the full batch."""
+    return unique_results[plan.scatter]

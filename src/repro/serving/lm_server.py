@@ -1,0 +1,60 @@
+"""Batched LM decode loop: prefill once, decode autoregressively, with the
+twin-prompt dedup plan collapsing identical requests before prefill."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as lm
+from repro.serving.dedup import DedupPlan, dedup_batch, fan_out
+
+
+class LMServer:
+    def __init__(self, params: dict, cfg: LMConfig, max_len: int = 1024):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self._prefill = jax.jit(lambda p, t: lm.prefill(p, t, cfg))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+
+    def generate(self, tokens: np.ndarray, n_new: int,
+                 dedup: bool = True, greedy: bool = True,
+                 key: jax.Array | None = None) -> tuple[np.ndarray, dict]:
+        """tokens: (B, S) prompts (equal length) -> (B, n_new) completions.
+
+        With ``dedup`` the batch collapses to unique prompts (the paper's
+        twin insight at the serving layer); identical prompts share prefill
+        *and* decode compute under greedy sampling.
+        """
+        B, S = tokens.shape
+        assert S + n_new <= self.max_len
+        plan: DedupPlan | None = None
+        work = tokens
+        if dedup and greedy:
+            plan = dedup_batch(tokens)
+            work = tokens[plan.unique_rows]
+
+        logits, cache = self._prefill(self.params, jnp.asarray(work))
+        # Grow the global cache to max_len for decode appends.
+        pad = self.max_len - S
+        cache = dict(cache)
+        for k in ("kg", "vg"):
+            if k in cache:
+                cache[k] = jnp.pad(cache[k],
+                                   ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+        out = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for i in range(n_new):
+            out.append(np.asarray(tok[:, 0]))
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(S + i))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        completions = np.stack(out, axis=1)              # (U, n_new)
+        info = {"prefill_rows": work.shape[0], "batch": B,
+                "dedup_savings": plan.savings if plan else 0.0}
+        if plan is not None:
+            completions = fan_out(completions, plan)
+        return completions, info

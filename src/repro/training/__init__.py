@@ -1,0 +1,10 @@
+from repro.training.optimizer import AdamW, SGD, AdamWState, warmup_cosine
+from repro.training.train_loop import (TrainLoopConfig, make_train_step,
+                                       run_loop)
+from repro.training import checkpoint
+from repro.training.compression import compress, init_ef, wire_bytes
+from repro.training.elastic import Action, StragglerMonitor
+
+__all__ = ["AdamW", "SGD", "AdamWState", "warmup_cosine", "TrainLoopConfig",
+           "make_train_step", "run_loop", "checkpoint", "compress",
+           "init_ef", "wire_bytes", "Action", "StragglerMonitor"]

@@ -1,0 +1,117 @@
+"""Fault-tolerant checkpointing.
+
+Layout: ``<dir>/step_<n>/`` holding one ``.npy`` per pytree leaf (keyed by
+its flattened path) + ``meta.json`` (step, leaf manifest, data-pipeline
+state).  Writes are atomic (tmp dir + rename) so a crash mid-save never
+corrupts the latest checkpoint; ``keep_last`` prunes old steps; restore
+accepts a target sharding pytree so a checkpoint taken on one mesh loads
+onto a different mesh shape (elastic resize after node loss).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any
+
+import numpy as np
+
+import jax
+
+
+def _leaf_key(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extra: dict | None = None, keep_last: int = 3) -> str:
+    """Atomically persist ``tree`` (any pytree of arrays) at ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {}
+    for path, leaf in leaves:
+        key = _leaf_key(path)
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype.kind not in "fiub" or dtype == "bfloat16":
+            # non-native dtypes (bfloat16) persist as fp32 + a dtype tag
+            arr = arr.astype(np.float32)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest[key] = {"file": fname, "dtype": dtype}
+    meta = {"step": step, "manifest": manifest, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, final)                  # atomic publish
+
+    _prune(ckpt_dir, keep_last)
+    return final
+
+
+def _prune(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int, dict]:
+    """Load into the structure of ``template``.  ``shardings`` (optional
+    pytree of NamedSharding) re-lays the arrays onto the current mesh —
+    checkpoints are mesh-shape agnostic."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    manifest = meta["manifest"]
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (path, tmpl), shard in zip(paths, shard_leaves):
+        key = _leaf_key(path)
+        entry = manifest[key]
+        fname = entry["file"] if isinstance(entry, dict) else entry
+        arr = np.load(os.path.join(d, fname))
+        val = jax.numpy.asarray(arr)
+        if hasattr(tmpl, "dtype"):
+            val = val.astype(tmpl.dtype)
+        leaves.append(jax.device_put(val, shard) if shard is not None
+                      else val)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta["step"], meta.get("extra", {})

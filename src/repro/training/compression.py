@@ -1,0 +1,61 @@
+"""Top-k gradient compression with error feedback (Deep Gradient
+Compression-style) for bandwidth-constrained inter-pod links.
+
+``compress`` keeps the largest-|g| fraction per leaf and accumulates the
+residual into an error-feedback buffer that is replayed next step, keeping
+the optimizer unbiased in expectation.  The sparsified gradient is returned
+dense (zeros elsewhere) — on a real fabric the (indices, values) pairs are
+what cross pods; ``wire_bytes`` reports that cost for the roofline log.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict
+
+
+def init_ef(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask(g: jax.Array, keep_frac: float) -> jax.Array:
+    if g.size <= 64:                      # tiny leaves always go dense
+        return jnp.ones_like(g, jnp.bool_)
+    k = max(1, int(g.size * keep_frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh)
+
+
+def compress(grads, ef: EFState, keep_frac: float = 0.01
+             ) -> tuple[dict, EFState]:
+    """Returns (sparsified grads, updated error-feedback state)."""
+    def per_leaf(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = _topk_mask(acc, keep_frac)
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent
+
+    pairs = jax.tree.map(per_leaf, grads, ef.residual)
+    sent = jax.tree.map(lambda x: x[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda x: x[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, EFState(residual=resid)
+
+
+def wire_bytes(params, keep_frac: float) -> int:
+    """Bytes a real sparse all-reduce would move per step (idx32 + fp16)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if p.size <= 64:
+            total += p.size * 2
+        else:
+            total += int(p.size * keep_frac) * (4 + 2)
+    return total

@@ -1,0 +1,125 @@
+"""Optimizers (pure-JAX pytree implementation, no external deps).
+
+AdamW with fp32 master weights + moments (params may live in bf16), global
+gradient-norm clipping, and warmup-cosine schedules.  The state layout is a
+flat NamedTuple-of-pytrees so checkpointing and ZeRO sharding rules apply
+uniformly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+    master: dict          # fp32 copy of the params
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+            # copy=True: fp32 params must not alias the master weights
+            # (param + opt-state donation would otherwise donate one
+            # buffer twice)
+            master=jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+                params),
+        )
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> tuple[dict, AdamWState]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        lr = self._lr(step)
+
+        def upd(g, m, v, w):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            w = w - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                          + self.weight_decay * w)
+            return m, v, w
+
+        flat = jax.tree.map(upd, g32, state.mu, state.nu, state.master)
+        mu = jax.tree.map(lambda x: x[0], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda x: x[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda x: x[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu, master=master)
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params):
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params),
+            nu={}, master=jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params))
+
+    def update(self, grads, state, params):
+        lr = self.lr(state.step + 1) if callable(self.lr) else self.lr
+        mu = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.mu, grads)
+        master = jax.tree.map(lambda w, m: w - lr * m, state.master, mu)
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master,
+                                  params)
+        return new_params, AdamWState(step=state.step + 1, mu=mu, nu={},
+                                      master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        t = step.astype(jnp.float32)
+        warm = t / max(warmup_steps, 1)
+        frac = jnp.clip((t - warmup_steps) / max(total_steps - warmup_steps,
+                                                 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak * jnp.minimum(warm, cos)
+    return sched

@@ -1,0 +1,119 @@
+"""Train-step assembly: loss -> grads -> (optional compression) -> optimizer,
+with gradient-accumulation microbatching so global batch is independent of
+per-device memory, and a restartable outer loop with checkpoint/straggler
+hooks (used by ``launch/train.py`` and the integration tests)."""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import checkpoint as ckpt_lib
+from repro.training.compression import EFState, compress, init_ef
+from repro.training.elastic import Action, StragglerMonitor
+
+log = logging.getLogger("repro.train")
+
+
+def make_train_step(loss_fn: Callable, optimizer, *,
+                    accum_steps: int = 1,
+                    compress_frac: float | None = None) -> Callable:
+    """loss_fn(params, batch) -> scalar.  Returns
+    step(params, opt_state, ef_state, batch) ->
+        (params, opt_state, ef_state, metrics).
+
+    With accum_steps > 1 the batch's leading axis is split into microbatches
+    scanned sequentially; gradients average across them (XLA overlaps each
+    microbatch's grad all-reduce with the next microbatch's compute).
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(params, opt_state, ef_state, batch):
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                tot, g = carry
+                l, gi = grad_fn(params, mb)
+                return (tot + l, jax.tree.map(jnp.add, g, gi)), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zeros),
+                                            micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        if compress_frac is not None:
+            grads, ef_state = compress(grads, ef_state, compress_frac)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss}
+        return params, opt_state, ef_state, metrics
+
+    return step
+
+
+@dataclass
+class TrainLoopConfig:
+    n_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    resume: bool = True
+
+
+def run_loop(step_fn: Callable, params, opt_state, batches, cfg:
+             TrainLoopConfig, *, ef_state: EFState | None = None,
+             monitor: StragglerMonitor | None = None,
+             data_state_fn: Callable[[int], dict] | None = None):
+    """Restartable training loop.
+
+    ``batches`` is a callable step -> batch (deterministic, so resuming at
+    step k replays the exact data order).  Returns (params, opt_state,
+    history).  On resume, the latest checkpoint's step is the start point
+    and already-consumed data is skipped by construction.
+    """
+    start = 0
+    if cfg.resume and cfg.ckpt_dir:
+        latest = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if latest is not None:
+            (params, opt_state), start, _extra = ckpt_lib.restore(
+                cfg.ckpt_dir, (params, opt_state))
+            log.info("resumed from step %d", start)
+
+    if ef_state is None:
+        ef_state = init_ef(params)
+    monitor = monitor or StragglerMonitor()
+    history = []
+    for step in range(start, cfg.n_steps):
+        monitor.step_started()
+        batch = batches(step)
+        params, opt_state, ef_state, metrics = step_fn(
+            params, opt_state, ef_state, batch)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        action = monitor.step_finished()
+        if step % cfg.log_every == 0:
+            log.info("step %d loss %.4f", step, loss)
+        if cfg.ckpt_dir and ((step + 1) % cfg.ckpt_every == 0
+                             or step + 1 == cfg.n_steps
+                             or action != Action.CONTINUE):
+            extra = data_state_fn(step + 1) if data_state_fn else {}
+            ckpt_lib.save(cfg.ckpt_dir, step + 1, (params, opt_state),
+                          extra=extra, keep_last=cfg.keep_last)
+        if action == Action.CHECKPOINT_AND_SHRINK:
+            log.warning("straggler policy tripped at step %d: checkpointed; "
+                        "relaunch with a shrunk mesh", step)
+            break
+        if action == Action.ABORT:
+            raise RuntimeError(f"step {step} exceeded hang timeout")
+    return params, opt_state, history

@@ -1,0 +1,75 @@
+"""Shared fixtures: reduced per-family configs for the CPU smoke tests.
+
+The FULL assigned configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation); tests instantiate the same *family
+structure* (MoE vs dense, MQA vs MHA, window pattern, CIN depth, tower
+shapes) at tiny dims.  XLA_FLAGS must stay unset here — smoke tests and
+benches see the 1 real CPU device (the dry-run sets 512 itself).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import (ArchSpec, LMConfig, MoEConfig, RecsysConfig,
+                                ShapeSpec)
+from repro.configs._fields import powerlaw_vocabs
+
+
+def tiny_lm(cfg: LMConfig) -> LMConfig:
+    """Shrink dims, keep structure (MoE/GQA ratio/window pattern/act)."""
+    unit = cfg.global_every or 1
+    n_layers = max(2, 2 * unit) if unit > 1 else 2
+    n_kv = 1 if cfg.n_kv_heads == 1 else (4 if cfg.n_kv_heads ==
+                                          cfg.n_heads else 2)
+    moe = None
+    if cfg.moe is not None:
+        moe = MoEConfig(n_experts=4, top_k=min(2, cfg.moe.top_k),
+                        d_ff_expert=64, n_shared=cfg.moe.n_shared)
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, d_model=64, n_heads=4, n_kv_heads=n_kv,
+        head_dim=16, d_ff=128, vocab_size=512, moe=moe,
+        window=(8 if cfg.window is not None else None),
+        global_every=cfg.global_every)
+
+
+def tiny_recsys(cfg: RecsysConfig) -> RecsysConfig:
+    changes: dict = {}
+    if cfg.field_vocab_sizes:
+        changes["field_vocab_sizes"] = powerlaw_vocabs(
+            len(cfg.field_vocab_sizes), largest=500, smallest=8, n_large=2)
+    if cfg.item_vocab:
+        changes["item_vocab"] = 1000
+    if cfg.user_vocab:
+        changes["user_vocab"] = 1000
+    if cfg.mlp_dims:
+        changes["mlp_dims"] = tuple(min(64, d) for d in cfg.mlp_dims)
+    if cfg.cin_layers:
+        changes["cin_layers"] = tuple(min(16, h) for h in cfg.cin_layers)
+    if cfg.tower_mlp:
+        changes["tower_mlp"] = (64, 32)
+    return dataclasses.replace(cfg, **changes)
+
+
+def reduced_spec(arch_id: str) -> ArchSpec:
+    spec = get_arch(arch_id)
+    if spec.family == "lm":
+        return dataclasses.replace(spec, config=tiny_lm(spec.config))
+    if spec.family == "recsys":
+        return dataclasses.replace(spec, config=tiny_recsys(spec.config))
+    return spec                     # gnn / cf configs are already small
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_ratings(rng, n=120, m=40, density=0.3):
+    R = (rng.integers(1, 6, (n, m)) * (rng.random((n, m)) < density)
+         ).astype(np.float32)
+    R[R.sum(axis=1) == 0, 0] = 3.0
+    return R

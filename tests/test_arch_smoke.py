@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + finiteness.  One test
+per assigned architecture (the full configs run via the dry-run only)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as lm_mod
+from tests.conftest import reduced_spec
+
+LM_ARCHS = ["olmoe-1b-7b", "llama4-scout-17b-a16e", "gemma3-1b",
+            "granite-20b", "gemma-7b"]
+REC_ARCHS = ["bst", "xdeepfm", "autoint", "two-tower-retrieval"]
+
+
+def _finite(x) -> bool:
+    return bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    spec = reduced_spec(arch)
+    cfg = spec.config
+    key = jax.random.PRNGKey(0)
+    params = lm_mod.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_mod.lm_loss(p, toks, cfg, loss_chunk=16))(params)
+    assert _finite(loss), arch
+    assert all(_finite(g) for g in jax.tree.leaves(grads)), arch
+
+    logits, cache = jax.jit(lambda p, t: lm_mod.prefill(p, t, cfg))(
+        params, toks)
+    assert logits.shape == (2, cfg.vocab_size)
+    lg, cache = jax.jit(
+        lambda p, c, t, pos: lm_mod.decode_step(p, c, t, pos, cfg))(
+        params, cache, toks[:, -1:], jnp.int32(32))
+    assert lg.shape == (2, cfg.vocab_size) and _finite(lg)
+
+
+def test_gat_cora_smoke(rng):
+    spec = reduced_spec("gat-cora")
+    cfg = spec.config
+    key = jax.random.PRNGKey(0)
+    from repro.data import cora_like, molecule_batch
+    data = cora_like(0)
+    params = gnn_mod.init_params(key, cfg, d_feat=data["feats"].shape[1])
+    batch = {k: jnp.asarray(v) for k, v in data.items()}
+    loss, grads = jax.value_and_grad(
+        lambda p: gnn_mod.loss_full(p, batch, cfg))(params)
+    assert _finite(loss)
+    assert all(_finite(g) for g in jax.tree.leaves(grads))
+
+    # sampled + molecule regimes
+    N = 60
+    p2 = gnn_mod.init_params(key, cfg, d_feat=16, n_out=5)
+    sb = {"feats": jax.random.normal(key, (N, 16)),
+          "roots": jnp.arange(8, dtype=jnp.int32),
+          "nbr1": jax.random.randint(key, (8, 4), 0, N),
+          "nbr2": jax.random.randint(key, (8 * 5, 3), 0, N),
+          "labels": jnp.zeros(8, jnp.int32)}
+    assert _finite(gnn_mod.loss_sampled(p2, sb, cfg))
+    mol = molecule_batch(0, batch=8, n_nodes=10, n_edges=14, d_feat=16)
+    p3 = gnn_mod.init_params(key, cfg, d_feat=16, n_out=2)
+    assert _finite(gnn_mod.loss_batched(
+        p3, {k: jnp.asarray(v) for k, v in mol.items()}, cfg))
+
+
+@pytest.mark.parametrize("arch", REC_ARCHS)
+def test_recsys_smoke(arch, rng):
+    spec = reduced_spec(arch)
+    cfg = spec.config
+    key = jax.random.PRNGKey(0)
+    params = rec_mod.init_params(key, cfg)
+
+    if cfg.variant == "two_tower":
+        from repro.data import TwoTowerStream
+        batch = {k: jnp.asarray(v)
+                 for k, v in TwoTowerStream(cfg, 16)(0).items()}
+    else:
+        from repro.data import CTRStream
+        batch = {k: jnp.asarray(v) for k, v in CTRStream(cfg, 16)(0).items()}
+
+    loss, grads = jax.value_and_grad(
+        lambda p: rec_mod.loss(p, batch, cfg))(params)
+    assert _finite(loss), arch
+    assert all(_finite(g) for g in jax.tree.leaves(grads)), arch
+
+    # serve path
+    if cfg.variant == "two_tower":
+        scores = rec_mod.forward(params, batch, cfg)
+        assert scores.shape == (16,) and _finite(scores)
+        rs = ShapeSpec("retrieval_cand", "retrieval",
+                       {"batch": 1, "n_candidates": 256})
+        structs = rec_mod.input_structs(cfg, rs)
+        rb = {k: jnp.zeros(v.shape, v.dtype) for k, v in structs.items()}
+        s, ids = rec_mod.retrieve(params, rb, cfg, top_k=10)
+        assert s.shape == (1, 10)
+    else:
+        logits = rec_mod.forward(params, batch, cfg)
+        assert logits.shape == (16,) and _finite(logits)
+
+
+def test_twinsearch_cf_smoke(rng):
+    from repro.models import cf as cf_mod
+    from repro.configs import get_arch
+    from repro.core import build_state, make_probes
+    spec = get_arch("twinsearch-cf")
+    from tests.conftest import make_ratings
+    R = make_ratings(rng, n=80, m=30)
+    vals, idx = jax.jit(cf_mod.build_step)(jnp.asarray(R, jnp.bfloat16))
+    assert vals.shape == (80, 80)
+    assert bool(jnp.all(jnp.diff(vals, axis=1) >= -1e-6))
+
+    k = 4
+    # the buffered/sharded onboard reads an immutable base state (no
+    # preallocated burst slots); lists cover base + burst entries
+    state = build_state(jnp.asarray(R), capacity_extra=0)
+    R_new = jnp.asarray(np.tile(R[5], (k, 1)), jnp.float32)
+    probes = make_probes(jax.random.PRNGKey(0), k, spec.config.c_probes, 80)
+    nvals, nidx, stats = cf_mod.onboard_step(state, R_new, probes,
+                                             spec.config)
+    assert nvals.shape == (k, 80 + k)
+    assert bool(np.asarray(stats.found)[1:].all())

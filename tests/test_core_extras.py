@@ -1,0 +1,126 @@
+"""Gaussian bound analysis, incremental updates, list maintenance, kNN."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (build_state, knn, insert_into_lists, splice_twin,
+                        SENTINEL_GATE)
+from repro.core.gaussian import (empirical_max_sublist, empirical_set0,
+                                 exact_fraction, paper_bound,
+                                 paper_fraction)
+from repro.core.similarity import cosine_matrix
+from repro.core.update import add_rating, init_cache
+from tests.conftest import make_ratings
+
+
+class TestGaussian:
+    def test_paper_constant_is_1_over_125(self):
+        assert paper_fraction() == pytest.approx(1 / 125, rel=0.01)
+        assert paper_bound(129_490) == pytest.approx(129_490 / 125, rel=0.01)
+
+    def test_exact_fraction_bounds(self):
+        # A narrow Gaussian concentrates mass -> bigger max sub-list.
+        assert exact_fraction(0.5, 0.02) > exact_fraction(0.5, 0.3)
+        assert 0 < exact_fraction(0.25, 0.25, x=100) < 1
+
+    def test_empirical_sublist_on_gaussian(self, rng):
+        vals = np.clip(rng.normal(0.3, 0.1, 20_000), 0, 1)
+        got = empirical_max_sublist(vals, x=100)
+        # max bin of N(0.3, 0.1) over width-0.01 bins ~ pdf(0.3)*0.01 ~ 4%
+        assert 0.02 * 20_000 < got < 0.08 * 20_000
+
+    def test_empirical_set0_monotone_in_probes(self, rng):
+        R = make_ratings(rng, n=150, m=40)
+        S = np.asarray(cosine_matrix(jnp.asarray(R)))
+        probes = np.asarray([3, 40, 77, 120])
+        s0 = S[probes, 9]
+        sizes = [empirical_set0(S[probes[:c]], s0[:c], 1e-6)
+                 for c in range(1, 5)]
+        assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+        assert sizes[-1] >= 1                    # user 9 itself qualifies
+
+
+class TestIncrementalUpdate:
+    def test_add_rating_matches_rebuild(self, rng):
+        R = make_ratings(rng, n=40, m=15)
+        state = build_state(jnp.asarray(R))
+        cache = init_cache(state.ratings)
+        state2, cache2 = add_rating(state, cache, jnp.int32(7),
+                                    jnp.int32(3), jnp.float32(5.0))
+        R2 = R.copy()
+        R2[7, 3] = 5.0
+        ref = build_state(jnp.asarray(R2))
+        np.testing.assert_allclose(np.asarray(state2.sim_vals[7]),
+                                   np.asarray(ref.sim_vals[7]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(cache2.dots),
+                                   np.asarray(R2.astype(np.float64) @
+                                              R2.T.astype(np.float64)),
+                                   atol=1e-2)
+
+    def test_remove_rating(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        R[5, 2] = 4.0
+        state = build_state(jnp.asarray(R))
+        cache = init_cache(state.ratings)
+        state2, _ = add_rating(state, cache, jnp.int32(5), jnp.int32(2),
+                               jnp.float32(0.0))
+        assert float(state2.ratings[5, 2]) == 0.0
+
+
+class TestMaintenance:
+    def test_insert_matches_rebuild(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        k = 1
+        state = build_state(jnp.asarray(R), capacity_extra=k)
+        r0 = R[4].copy()
+        from repro.core import baseline
+        vals, idx, sims = baseline.build_list(state, jnp.asarray(r0))
+        state2 = baseline.append_user(state, jnp.asarray(r0), vals, idx)
+        state3 = insert_into_lists(state2, jnp.int32(30), sims)
+        # Every old user's list now contains user 30 with the right sim.
+        R_full = np.concatenate([R, r0[None]], axis=0)
+        ref = build_state(jnp.asarray(R_full))
+        for u in (0, 7, 19):
+            # the insert consumed the one sentinel slot: rows align exactly
+            got = np.asarray(state3.sim_vals[u])
+            want = np.asarray(ref.sim_vals[u])
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_splice_twin_equals_insert(self, rng):
+        R = make_ratings(rng, n=25, m=10)
+        state = build_state(jnp.asarray(R), capacity_extra=1)
+        r0 = R[6].copy()                        # exact twin of user 6
+        from repro.core import baseline
+        vals, idx, sims = baseline.build_list(state, jnp.asarray(r0))
+        st = baseline.append_user(state, jnp.asarray(r0), vals, idx)
+        a = insert_into_lists(st, jnp.int32(25), sims)
+        b = splice_twin(st, jnp.int32(25), jnp.int32(6))
+        for u in (0, 10, 20):
+            np.testing.assert_allclose(np.asarray(a.sim_vals[u]),
+                                       np.asarray(b.sim_vals[u]), atol=1e-5)
+
+
+class TestKNN:
+    def test_top_k_excludes_self(self, rng):
+        R = make_ratings(rng)
+        state = build_state(jnp.asarray(R))
+        sims, nbrs = knn.top_k_neighbors(state, jnp.int32(5), 10)
+        assert 5 not in np.asarray(nbrs)
+        assert bool(jnp.all(sims > SENTINEL_GATE))
+
+    def test_predict_in_range(self, rng):
+        R = make_ratings(rng)
+        state = build_state(jnp.asarray(R))
+        p = knn.predict(state, jnp.int32(3), jnp.int32(7), k=10)
+        assert 0.0 <= float(p) <= 5.0
+
+    def test_recommend_unseen_only(self, rng):
+        R = make_ratings(rng)
+        state = build_state(jnp.asarray(R))
+        scores, items = knn.recommend(state, jnp.int32(2), n_rec=5)
+        for it in np.asarray(items):
+            assert R[2, it] == 0

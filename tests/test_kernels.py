@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import (cosine_similarity, embedding_bag, twin_probe,
+                           verify_rows)
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.similarity.ref import similarity_ref
+from repro.kernels.twin_probe.ref import twin_probe_ref
+from repro.kernels.verify_rows.ref import verify_rows_ref
+
+
+@pytest.mark.parametrize("nq,n,m", [(8, 16, 32), (37, 451, 300),
+                                    (128, 256, 512), (1, 943, 1682),
+                                    (130, 259, 515)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_similarity_sweep(nq, n, m, dtype):
+    rng = np.random.default_rng(nq * 1000 + n)
+    Q = jnp.asarray(rng.normal(size=(nq, m)).astype(np.float32)).astype(
+        dtype)
+    R = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32)).astype(
+        dtype)
+    out = cosine_similarity(Q, R)
+    qn = jnp.linalg.norm(Q.astype(jnp.float32), axis=1)
+    rn = jnp.linalg.norm(R.astype(jnp.float32), axis=1)
+    ref = similarity_ref(Q, R, qn, rn)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+
+
+@pytest.mark.parametrize("c,N", [(2, 64), (8, 700), (16, 2048), (8, 513)])
+def test_twin_probe_sweep(c, N):
+    rng = np.random.default_rng(c * N)
+    rows = jnp.asarray(rng.uniform(0, 1, (c, N)).astype(np.float32))
+    s0 = rows[:, N // 3]
+    mask, count = twin_probe(rows, s0, tol=1e-6)
+    mref, cref = twin_probe_ref(rows, s0, 1e-6)
+    assert np.array_equal(np.asarray(mask), np.asarray(mref))
+    assert int(count) == int(cref)
+
+
+@pytest.mark.parametrize("s,m", [(8, 16), (37, 211), (256, 512), (300, 700)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int8])
+def test_verify_rows_sweep(s, m, dtype):
+    rng = np.random.default_rng(s * m)
+    C = jnp.asarray(rng.integers(0, 6, (s, m)).astype(dtype))
+    r0 = C[s // 2]
+    valid = jnp.asarray(rng.random(s) < 0.8)
+    out = verify_rows(C, r0, valid)
+    ref = verify_rows_ref(C, r0, valid)[:, 0]
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("nb,hot,V,dim", [(4, 2, 50, 8), (16, 8, 1000, 128),
+                                          (33, 5, 200, 64)])
+def test_embedding_bag_sweep(nb, hot, V, dim):
+    rng = np.random.default_rng(nb * hot)
+    table = jnp.asarray(rng.normal(size=(V, dim)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, V, (nb, hot)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 1, (nb, hot)).astype(np.float32))
+    mask = jnp.asarray(rng.random((nb, hot)) < 0.7)
+    out = embedding_bag(table, idx, w, mask)
+    ref = embedding_bag_ref(table, idx, w * mask.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 70), st.integers(2, 90),
+       st.integers(2, 130))
+def test_property_similarity_any_shape(seed, nq, n, m):
+    rng = np.random.default_rng(seed)
+    Q = jnp.asarray(rng.normal(size=(nq, m)).astype(np.float32))
+    R = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    out = cosine_similarity(Q, R)
+    assert out.shape == (nq, n)
+    ref = similarity_ref(Q, R, jnp.linalg.norm(Q, axis=1),
+                         jnp.linalg.norm(R, axis=1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 9))
+def test_property_bag_any_shape(seed, nb, hot):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 64, (nb, hot)).astype(np.int32))
+    out = embedding_bag(table, idx)
+    ref = embedding_bag_ref(table, idx, jnp.ones((nb, hot)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)

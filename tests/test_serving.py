@@ -1,0 +1,89 @@
+"""Serving layer: CF server end-to-end, twin-prompt dedup, LM generate."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.serving import CFServer, LMServer, dedup_batch, fan_out
+from tests.conftest import make_ratings, reduced_spec
+
+
+class TestCFServer:
+    def test_onboard_twin_fast_path(self, rng):
+        R = make_ratings(rng, n=100, m=30)
+        srv = CFServer(R, capacity_extra=8, c_probes=6)
+        uid, info = srv.onboard_user(R[11])
+        assert uid == 100 and info["twin_found"]
+        # identical duplicate users keep hitting
+        for _ in range(3):
+            _, info = srv.onboard_user(R[11])
+            assert info["twin_found"]
+        assert srv.stats.twin_hits == 4
+
+    def test_onboard_fresh_falls_back_then_twins(self, rng):
+        R = make_ratings(rng, n=80, m=25)
+        srv = CFServer(R, capacity_extra=8)
+        fresh = make_ratings(np.random.default_rng(42), n=1, m=25)[0]
+        _, info1 = srv.onboard_user(fresh)
+        assert not info1["twin_found"]
+        _, info2 = srv.onboard_user(fresh)
+        assert info2["twin_found"]               # twins the first copy
+        s = srv.stats.summary()
+        assert s["onboarded"] == 2 and s["fallbacks"] == 1
+
+    def test_queries_and_updates(self, rng):
+        R = make_ratings(rng, n=60, m=20)
+        srv = CFServer(R, capacity_extra=4)
+        recs = srv.recommend(3, n=5)
+        assert len(recs) == 5
+        assert all(R[3, i] == 0 for i, _ in recs)
+        p = srv.predict(3, 7)
+        assert 0.0 <= p <= 5.0
+        srv.add_rating(3, 7, 5.0)
+        assert float(srv.state.ratings[3, 7]) == 5.0
+
+    def test_capacity_guard(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=1)
+        srv.onboard_user(R[0])
+        import pytest
+        with pytest.raises(RuntimeError):
+            srv.onboard_user(R[1])
+
+
+class TestDedup:
+    def test_dedup_collapses_twins(self):
+        rng = np.random.default_rng(0)
+        uniq = rng.integers(0, 100, (3, 16)).astype(np.int32)
+        batch = uniq[[0, 1, 0, 2, 1, 0]]
+        plan = dedup_batch(batch)
+        assert plan.n_unique == 3
+        assert plan.savings == 0.5
+        res = np.arange(3)[:, None] * np.ones((1, 4))
+        out = fan_out(res, plan)
+        np.testing.assert_array_equal(out[:, 0], [0, 1, 0, 2, 1, 0])
+
+    def test_no_false_sharing(self):
+        a = np.zeros((2, 8), np.int32)
+        a[1, 7] = 1
+        plan = dedup_batch(a)
+        assert plan.n_unique == 2
+
+
+class TestLMServer:
+    def test_generate_dedup_consistent(self):
+        spec = reduced_spec("gemma3-1b")
+        cfg = spec.config
+        params = __import__("repro.models.transformer",
+                            fromlist=["x"]).init_params(
+            jax.random.PRNGKey(0), cfg)
+        srv = LMServer(params, cfg, max_len=64)
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
+        batch = prompts[[0, 1, 0, 0]]
+        out_dedup, info = srv.generate(batch, n_new=4, dedup=True)
+        out_full, _ = srv.generate(batch, n_new=4, dedup=False)
+        assert info["prefill_rows"] == 2 and info["dedup_savings"] == 0.5
+        np.testing.assert_array_equal(out_dedup, out_full)
+        np.testing.assert_array_equal(out_dedup[0], out_dedup[2])

@@ -1,0 +1,53 @@
+"""End-to-end behaviour tests for the paper's system: the full journey a
+production deployment exercises — build, onboard (both paths), query,
+update, checkpoint the serving state, and restore."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_state, knn
+from repro.serving import CFServer
+from repro.training import checkpoint
+from tests.conftest import make_ratings
+
+
+def test_full_system_journey(rng, tmp_path):
+    R = make_ratings(rng, n=150, m=50)
+    srv = CFServer(R, capacity_extra=16, c_probes=6)
+
+    # 1. onboard a twin burst (the paper's special case)
+    for i in range(5):
+        uid, info = srv.onboard_user(R[33])
+        assert info["twin_found"]
+
+    # 2. recommendations flow for the new users immediately
+    recs = srv.recommend(152, n=5)
+    assert len(recs) == 5 and all(R[33][i] == 0 for i, _ in recs)
+
+    # 3. the new users' neighbourhoods contain their twins at sim 1.0
+    sims, nbrs = knn.top_k_neighbors(srv.state, jnp.int32(151), 4)
+    assert 33 in np.asarray(nbrs) or 150 in np.asarray(nbrs)
+    assert float(sims[0]) == pytest.approx(1.0, abs=1e-5)
+
+    # 4. a rating update shifts the affected user's similarity row
+    before = np.asarray(srv.state.sim_vals[10]).copy()
+    srv.add_rating(10, 3, 5.0)
+    after = np.asarray(srv.state.sim_vals[10])
+    assert not np.allclose(before, after)
+
+    # 5. checkpoint the serving state, restore, answers unchanged
+    checkpoint.save(str(tmp_path), 1, srv.state._asdict())
+    restored, step, _ = checkpoint.restore(str(tmp_path),
+                                           srv.state._asdict())
+    np.testing.assert_allclose(np.asarray(restored["sim_vals"]),
+                               np.asarray(srv.state.sim_vals), atol=1e-6)
+
+
+def test_build_matches_oracle_end_to_end(rng):
+    from repro.core.reference import build_sorted_lists_np
+    R = make_ratings(rng, n=60, m=25)
+    state = build_state(jnp.asarray(R))
+    sv, si = build_sorted_lists_np(R)
+    np.testing.assert_allclose(np.asarray(state.sim_vals), sv, atol=1e-5)

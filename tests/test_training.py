@@ -1,0 +1,166 @@
+"""Training substrate: optimizer, loop, checkpoint/resume, compression,
+straggler policy."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import (AdamW, SGD, Action, StragglerMonitor,
+                            TrainLoopConfig, checkpoint, compress, init_ef,
+                            make_train_step, run_loop, warmup_cosine,
+                            wire_bytes)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0],
+                               atol=1e-2)
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1e-3)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    p2, _ = opt.update({"w": jnp.full(4, 1e6)}, state, params)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 2.0
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, abs=0.02)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, abs=0.02)
+
+
+def test_bf16_params_fp32_master():
+    opt = AdamW(lr=0.01)
+    params = {"w": jnp.zeros(8, jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.master["w"].dtype == jnp.float32
+    p2, s2 = opt.update({"w": jnp.ones(8, jnp.bfloat16)}, state, params)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def _toy_problem():
+    """Linear regression 'model' with a deterministic stream."""
+    W_true = np.random.default_rng(0).normal(size=(4, 3)).astype(np.float32)
+
+    def batches(step):
+        rng = np.random.default_rng([7, step])
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(x @ W_true)}
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["W"]
+        return jnp.mean(jnp.square(pred - batch["y"]))
+
+    params = {"W": jnp.zeros((4, 3))}
+    return params, loss_fn, batches
+
+
+def test_loop_learns_and_checkpoints(tmp_path):
+    params, loss_fn, batches = _toy_problem()
+    opt = AdamW(lr=0.05)
+    step = make_train_step(loss_fn, opt)
+    cfg = TrainLoopConfig(n_steps=60, ckpt_dir=str(tmp_path), ckpt_every=20)
+    p, s, hist = run_loop(step, params, opt.init(params), batches, cfg)
+    assert hist[-1] < hist[0] * 0.1
+    assert checkpoint.latest_step(str(tmp_path)) == 60
+
+
+def test_kill_resume_equivalence(tmp_path):
+    """Training 60 straight == training 30, 'crashing', resuming to 60."""
+    params, loss_fn, batches = _toy_problem()
+    opt = AdamW(lr=0.05)
+    step = make_train_step(loss_fn, opt)
+
+    cfg_a = TrainLoopConfig(n_steps=60, ckpt_dir=str(tmp_path / "a"),
+                            ckpt_every=10)
+    pa, _, _ = run_loop(step, params, opt.init(params), batches, cfg_a)
+
+    cfg_b1 = TrainLoopConfig(n_steps=30, ckpt_dir=str(tmp_path / "b"),
+                             ckpt_every=10)
+    run_loop(step, params, opt.init(params), batches, cfg_b1)
+    cfg_b2 = TrainLoopConfig(n_steps=60, ckpt_dir=str(tmp_path / "b"),
+                             ckpt_every=10, resume=True)
+    pb, _, _ = run_loop(step, params, opt.init(params), batches, cfg_b2)
+    np.testing.assert_allclose(np.asarray(pa["W"]), np.asarray(pb["W"]),
+                               atol=1e-6)
+
+
+def test_accum_matches_full_batch():
+    params, loss_fn, batches = _toy_problem()
+    opt = AdamW(lr=0.05)
+    b = batches(0)
+    s1 = make_train_step(loss_fn, opt)
+    s4 = make_train_step(loss_fn, opt, accum_steps=4)
+    ef = init_ef(params)
+    p1, *_ = s1(params, opt.init(params), ef, b)
+    p4, *_ = s4(params, opt.init(params), ef, b)
+    np.testing.assert_allclose(np.asarray(p1["W"]), np.asarray(p4["W"]),
+                               atol=1e-5)
+
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(str(tmp_path), s, tree, keep_last=2)
+    assert checkpoint.all_steps(str(tmp_path)) == [4, 5]
+    restored, step, _ = checkpoint.restore(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(10.0))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_compression_error_feedback():
+    params = {"w": jnp.zeros(1000)}
+    ef = init_ef(params)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=1000).astype(np.float32))}
+    sent, ef = compress(g, ef, keep_frac=0.05)
+    nz = int(jnp.sum(sent["w"] != 0))
+    assert nz <= 60
+    # residual + sent reconstructs the gradient exactly
+    np.testing.assert_allclose(np.asarray(sent["w"] + ef.residual["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+    # second step replays the residual
+    sent2, ef2 = compress({"w": jnp.zeros(1000)}, ef, keep_frac=0.05)
+    assert float(jnp.sum(jnp.abs(sent2["w"]))) > 0
+    assert wire_bytes(params, 0.05) < 1000 * 4
+
+
+def test_straggler_monitor():
+    t = [0.0]
+    mon = StragglerMonitor(window=20, straggler_ratio=2.0,
+                           consecutive_to_shrink=2, clock=lambda: t[0])
+    for i in range(30):
+        mon.step_started()
+        t[0] += 0.10                            # simulate 100ms steps
+        a = mon.step_finished()
+        assert a == Action.CONTINUE
+    for i in range(2):
+        mon.step_started()
+        t[0] += 1.0                             # 10x straggler
+        a = mon.step_finished()
+    assert a == Action.CHECKPOINT_AND_SHRINK
+    st = mon.stats()
+    assert st["p50_s"] < st["max_s"]
+
+
+def test_shrink_mesh_shape():
+    from repro.training.elastic import shrink_mesh_shape
+    assert shrink_mesh_shape((16, 16)) == (8, 16)
+    assert shrink_mesh_shape((2, 16, 16)) == (1, 16, 16)

@@ -7,7 +7,15 @@ import jax
 
 
 def time_call(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
-    """Median wall seconds of ``fn(*args)`` (jit-compiled, blocked)."""
+    """Median wall seconds of ``fn(*args)`` (jit-compiled, blocked).
+
+    Both the inputs and every returned array are ``block_until_ready``'d:
+    ``jax.block_until_ready`` traverses arbitrary pytrees (CFState /
+    OnboardStats namedtuples included), so async host-to-device transfers
+    of the arguments never leak into the timed region and the timed call
+    can't return an unfinished future.
+    """
+    args = jax.block_until_ready(args)
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

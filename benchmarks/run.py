@@ -1,9 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-  twinsearch_bench  Figures 2-5 (running time, user/item x ML/Douban)
-  setsize_bench     Sec 3.2 |Set_0| / Gaussian-bound validation
-  scaling_bench     Sec 3.2 complexity model (k and n sweeps)
-  kernel_bench      hot-spot micro-benchmarks
+  twinsearch_bench   Figures 2-5 (running time, user/item x ML/Douban)
+  setsize_bench      Sec 3.2 |Set_0| / Gaussian-bound validation
+  scaling_bench      Sec 3.2 complexity model (k and n sweeps)
+  kernel_bench       hot-spot micro-benchmarks
+  maintenance_bench  burst-batched k-way merge-insert vs k sequential
+                     inserts (bit-exactness asserted), k in {1,5,10,20,30}
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full-scale
 cells come from ``python -m repro.launch.dryrun --all`` +
@@ -19,17 +21,18 @@ from benchmarks.common import CSV
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["twinsearch", "setsize", "scaling",
-                                       "kernel"], default=None)
+                                       "kernel", "maintenance"], default=None)
     args, _ = ap.parse_known_args()
 
     csv = CSV()
     csv.header()
-    from benchmarks import (kernel_bench, scaling_bench, setsize_bench,
-                            twinsearch_bench)
+    from benchmarks import (kernel_bench, maintenance_bench, scaling_bench,
+                            setsize_bench, twinsearch_bench)
     todo = {
         "setsize": setsize_bench.main,
         "scaling": scaling_bench.main,
         "kernel": kernel_bench.main,
+        "maintenance": maintenance_bench.main,
         "twinsearch": twinsearch_bench.main,
     }
     for name, fn in todo.items():

@@ -1,0 +1,25 @@
+"""Version shims for the pinned container jax.
+
+``jax.shard_map`` (and its ``check_vma`` kwarg) landed after 0.4.x; older
+releases ship the same function as ``jax.experimental.shard_map.shard_map``
+with the kwarg spelled ``check_rep``.  Call sites import ``shard_map`` from
+here and always use the new spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _NEW_API = True
+except AttributeError:                     # pragma: no cover - env dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_API = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _NEW_API:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

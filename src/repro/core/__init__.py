@@ -14,7 +14,10 @@ from repro.core.baseline import (build_list, append_user, onboard_traditional,
 from repro.core.twinsearch import (twinsearch_find, onboard_twinsearch,
                                    onboard_batch, make_probes, probe_sims,
                                    candidate_mask, verify_candidates)
-from repro.core.maintenance import insert_into_lists, splice_twin
+from repro.core.maintenance import (insert_into_lists,
+                                    insert_batch_into_lists,
+                                    merge_new_users_into_base, splice_twin,
+                                    splice_twins, twin_sims_block)
 
 __all__ = [
     "CFState", "OnboardStats", "TwinResult", "SENTINEL", "SENTINEL_GATE",
@@ -24,5 +27,7 @@ __all__ = [
     "recommend", "build_list", "append_user", "onboard_traditional",
     "onboard_batch_traditional", "twinsearch_find", "onboard_twinsearch",
     "onboard_batch", "make_probes", "probe_sims", "candidate_mask",
-    "verify_candidates", "insert_into_lists", "splice_twin",
+    "verify_candidates", "insert_into_lists", "insert_batch_into_lists",
+    "merge_new_users_into_base", "splice_twin", "splice_twins",
+    "twin_sims_block",
 ]

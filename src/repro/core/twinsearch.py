@@ -213,8 +213,8 @@ def make_probes(key: jax.Array, k: int, c: int, n_base: int) -> jax.Array:
 def onboard_batch_buffered(state: CFState, R_new: jax.Array,
                            probe_idx: jax.Array, *, s_max: int,
                            tol: float = 1e-6, unroll: bool = False,
-                           rows_spec=None
-                           ) -> tuple[jax.Array, jax.Array, OnboardStats]:
+                           rows_spec=None, maintain: bool = False,
+                           use_pallas: bool | None = None):
     """Distributed onboarding burst over an **immutable** base state.
 
     The mutable-arena variant (``onboard_batch``) dynamic-updates rows of
@@ -231,7 +231,13 @@ def onboard_batch_buffered(state: CFState, R_new: jax.Array,
         reads at all);
       * all k rows sort once, vectorised, at the end.
 
-    Returns (vals (k, N_tot) ascending, idx (k, N_tot), stats).
+    Returns (vals (k, N_tot) ascending, idx (k, N_tot), stats); with
+    ``maintain=True`` a fourth element (base_vals, base_idx) — every base
+    row's list re-sorted to width N_tot with all k new users merged in by
+    one fused k-way merge-insert (``repro/kernels/list_merge``), fed
+    directly from the write buffer's base columns at zero extra similarity
+    compute.  This is the batched replacement for k sequential
+    ``insert_into_lists`` passes: O(N·(N + k)) instead of k·O(N²).
     """
     N_base = state.capacity
     k, m = R_new.shape
@@ -288,5 +294,12 @@ def onboard_batch_buffered(state: CFState, R_new: jax.Array,
 
     idx = jnp.argsort(buf, axis=1).astype(jnp.int32)
     vals = jnp.take_along_axis(buf, idx, axis=1)
-    return vals, idx, OnboardStats(found=found, twin_idx=twin,
-                                   n_candidates=ncand, overflowed=ovf)
+    stats = OnboardStats(found=found, twin_idx=twin, n_candidates=ncand,
+                         overflowed=ovf)
+    if not maintain:
+        return vals, idx, stats
+    from repro.core.maintenance import merge_new_users_into_base
+    maintained = merge_new_users_into_base(
+        state.sim_vals, state.sim_idx, buf[:, :N_base],
+        N_base + karange, use_pallas=use_pallas)
+    return vals, idx, stats, maintained

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro._compat import shard_map
+
 from repro.core.types import CFState, OnboardStats, SENTINEL
 
 
@@ -38,9 +40,17 @@ def _shard_id(axes: tuple[str, ...], sizes: dict[str, int]) -> jax.Array:
 def onboard_batch_sharded(state: CFState, R_new: jax.Array,
                           probe_idx: jax.Array, *, s_max: int,
                           axes: tuple[str, ...], mesh, tol: float = 1e-6,
-                          unroll: bool = False):
+                          unroll: bool = False, maintain: bool = False):
     """state arrays row-sharded P(axes, ...); returns (vals, idx, stats)
-    for the k new users, lists over N_base + k entries (ascending)."""
+    for the k new users, lists over N_base + k entries (ascending).
+
+    ``maintain=True`` appends a fourth element (base_vals, base_idx): the
+    row-sharded (N_base, N_base + k) base lists with the whole burst
+    merged in.  The k-way merge-insert is row-local — each shard merges
+    only its own rows, reading its slice of the replicated write buffer —
+    so batched maintenance adds **zero** collective traffic on top of the
+    onboarding scan (vs k full shift-gather passes sequentially).
+    """
     N_base = state.capacity
     k, m = R_new.shape
     N_tot = N_base + k
@@ -162,17 +172,36 @@ def onboard_batch_sharded(state: CFState, R_new: jax.Array,
                                       unroll=k if unroll else 1)
         idx = jnp.argsort(buf, axis=1).astype(jnp.int32)
         vals = jnp.take_along_axis(buf, idx, axis=1)
-        return vals, idx, outs
+        if not maintain:
+            return vals, idx, outs
+        # Shard-local batched maintenance: merge the burst into this
+        # shard's (rows_loc, N_base) lists, fed by the local column slice
+        # of the replicated write buffer.  No collectives.
+        sid = _shard_id(axes, sizes)
+        sims_loc = jax.lax.dynamic_slice(buf, (0, sid * rows_loc),
+                                         (k, rows_loc))
+        from repro.core.maintenance import merge_new_users_into_base
+        m_vals, m_idx = merge_new_users_into_base(
+            sim_vals, sim_idx, sims_loc,
+            N_base + jnp.arange(k, dtype=jnp.int32), use_pallas=False)
+        return vals, idx, outs, (m_vals, m_idx)
 
     rows = P(axes, None)
-    vals, idx, (found, twin, ncand, ovf) = jax.shard_map(
+    out_specs = (P(None, None), P(None, None),
+                 (P(None), P(None), P(None), P(None)))
+    if maintain:
+        out_specs = out_specs + ((rows, rows),)
+    out = shard_map(
         local,
         mesh=mesh,
         in_specs=(rows, P(axes), rows, rows, P(None, None), P(None, None)),
-        out_specs=(P(None, None), P(None, None),
-                   (P(None), P(None), P(None), P(None))),
+        out_specs=out_specs,
         check_vma=False,
     )(state.ratings, state.norms, state.sim_vals, state.sim_idx, R_new,
       probe_idx)
-    return vals, idx, OnboardStats(found=found, twin_idx=twin,
-                                   n_candidates=ncand, overflowed=ovf)
+    vals, idx, (found, twin, ncand, ovf) = out[:3]
+    stats = OnboardStats(found=found, twin_idx=twin, n_candidates=ncand,
+                         overflowed=ovf)
+    if maintain:
+        return vals, idx, stats, out[3]
+    return vals, idx, stats

@@ -9,11 +9,14 @@ oracle the tests assert against in interpret mode).
   twin_probe/     fused c-probe interval intersection + |Set_0| count
   verify_rows/    fused masked row-equality verification (Alg. 1 ll.10-15)
   embedding_bag/  scalar-prefetch row-gather bag sum (recsys substrate)
+  list_merge/     fused k-way merge-insert for sorted-list maintenance
+                  (burst-batched onboarding: k inserts, one arena pass)
 """
 from repro.kernels.similarity.ops import cosine_similarity
 from repro.kernels.twin_probe.ops import twin_probe
 from repro.kernels.verify_rows.ops import verify_rows
 from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.list_merge.ops import merge_insert
 
 __all__ = ["cosine_similarity", "twin_probe", "verify_rows",
-           "embedding_bag"]
+           "embedding_bag", "merge_insert"]

@@ -1,0 +1,15 @@
+"""Version shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream;
+this container pins a jax where only the old name exists.  Every kernel
+imports the alias from here so the family works on either side of the
+rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

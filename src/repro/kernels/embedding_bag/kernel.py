@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _bag_kernel(idx_ref, w_ref, table_ref, o_ref):
     b = pl.program_id(0)
@@ -52,7 +54,7 @@ def embedding_bag_pallas(table: jax.Array, idx: jax.Array,
         _bag_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_bags, dim), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(idx, weights, table)

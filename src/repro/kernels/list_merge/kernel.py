@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: fused k-way merge-insert for ascending sorted lists.
+
+One grid step owns a (br, LP) block of rows and merges each row's k
+pre-sorted inserts in a single pass, replacing k sequential shift-gathers
+(k full HBM round-trips of the (N, N) arena) with one read + one write:
+
+  1. insert ranks:   rank_t = |{j : row[j] <= s_t}| + t — one broadcast
+                     compare-reduce per insert (the k-way ``searchsorted``);
+  2. merge path:     b(j) = |{t : rank_t < j + k}| counts inserts landing
+                     strictly before output slot j (merged rank j + k, the
+                     k smallest being dropped);
+  3. gather:         out[j] = row[j + k − b(j)] or, when an insert's rank
+                     equals j + k, ins[b(j)].  The data-dependent offset
+                     k − b(j) ∈ [0, k] is resolved as k + 1 static shifted
+                     selects, so the kernel needs no in-VMEM gather.
+
+Work per row is O(L·k) compares/selects on the VPU, all on (br, LP)
+blocks; the inputs stream HBM -> VMEM once, totalling O(N·(N + k)) for the
+whole arena versus the sequential path's k·O(N²).
+
+Inputs must be pre-conditioned by ``ops.py``: inserts sorted ascending per
+row with masked/padded lanes at ``NEG_INF``, list columns padded to LP >=
+L + k with ``POS_INF`` (see ``ref.py`` for the value contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+from repro.kernels.list_merge.ref import POS_INF
+
+
+def _shift_left(x: jax.Array, d: int) -> jax.Array:
+    """x[:, j + d] with wrap-around; callers only select j + d < LP."""
+    if d == 0:
+        return x
+    return jnp.concatenate([x[:, d:], x[:, :d]], axis=1)
+
+
+def _merge_kernel(vals_ref, idx_ref, iv_ref, ii_ref, ov_ref, oi_ref, *,
+                  kp: int):
+    v = vals_ref[...]                                # (br, LP), pad POS_INF
+    ids = idx_ref[...]                               # (br, LP) int32
+    sv = iv_ref[...]                                 # (br, kp) ascending
+    si = ii_ref[...]                                 # (br, kp) int32
+    br, LP = v.shape
+
+    # 1. insert ranks: rank_t = #{row entries <= s_t} + t.  Row entries tie-
+    # break before inserts (side="right"); among equal inserts the +t term
+    # preserves burst order.  POS_INF column pads never count.
+    ranks = []
+    for t in range(kp):
+        p = jnp.sum((v <= sv[:, t:t + 1]).astype(jnp.int32), axis=1,
+                    keepdims=True)                   # (br, 1)
+        ranks.append(p + t)
+
+    # 2. merge path: output slot j holds merged rank j + kp (first kp
+    # dropped); b(j) inserts precede it, and it IS insert b(j) iff some
+    # rank_t == j + kp (ranks are strictly increasing in t).
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (br, LP), 1) + kp
+    b = jnp.zeros((br, LP), jnp.int32)
+    is_ins = jnp.zeros((br, LP), jnp.bool_)
+    for t in range(kp):
+        b += (ranks[t] < tgt).astype(jnp.int32)
+        is_ins |= ranks[t] == tgt
+
+    # 3. gather via static shifted selects: row part reads row[j + kp - b].
+    out_v = jnp.zeros((br, LP), v.dtype)
+    out_i = jnp.zeros((br, LP), ids.dtype)
+    for d in range(kp + 1):
+        sel = jnp.logical_not(is_ins) & (b == kp - d)
+        out_v = jnp.where(sel, _shift_left(v, d), out_v)
+        out_i = jnp.where(sel, _shift_left(ids, d), out_i)
+    for t in range(kp):
+        sel = is_ins & (b == t)
+        out_v = jnp.where(sel, sv[:, t:t + 1], out_v)
+        out_i = jnp.where(sel, si[:, t:t + 1], out_i)
+    ov_ref[...] = out_v
+    oi_ref[...] = out_i
+
+
+def merge_insert_pallas(vals: jax.Array, idx: jax.Array,
+                        ins_vals: jax.Array, ins_idx: jax.Array, *,
+                        br: int = 8, interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """(R, LP) padded lists + (R, kp) sorted gated inserts -> merged (R, LP).
+
+    ``ops.py`` handles padding (rows to br, columns to LP >= L + kp with
+    POS_INF, insert lanes to kp with NEG_INF) and slices the result back.
+    Only the leading L output columns are meaningful.
+    """
+    R, LP = vals.shape
+    R2, kp = ins_vals.shape
+    assert R == R2 and R % br == 0, (vals.shape, ins_vals.shape, br)
+    assert idx.shape == (R, LP) and ins_idx.shape == (R, kp)
+    grid = (R // br,)
+    kernel = functools.partial(_merge_kernel, kp=kp)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LP), lambda i: (i, 0)),
+            pl.BlockSpec((br, LP), lambda i: (i, 0)),
+            pl.BlockSpec((br, kp), lambda i: (i, 0)),
+            pl.BlockSpec((br, kp), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((br, LP), lambda i: (i, 0)),
+            pl.BlockSpec((br, LP), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((R, LP), vals.dtype),
+            jax.ShapeDtypeStruct((R, LP), jnp.int32),
+        ),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(vals, idx, ins_vals, ins_idx)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the k-way merge-insert kernel.
+
+Semantics (shared by every backend): each row holds an ascending list of
+width L; a burst of k (value, index) inserts is merged in *burst order*
+and the k smallest elements of the merged (L + k) multiset are dropped.
+This reproduces exactly k sequential drop-min shift-inserts with
+``searchsorted(side="right")`` placement: on equal values the incumbent
+(older) entry is the one dropped at the head and the newer one lands to
+its right, so the merged order is (value ascending, age ascending) with
+row entries older than every insert and inserts aged by burst position.
+
+Masked-off inserts take the value ``NEG_INF`` (strictly below the
+SENTINEL): they sort to the very front of the merged order and are always
+among the k dropped, i.e. they are exact no-ops.  Per-row gating and
+lane padding therefore share one mechanism.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Strictly below SENTINEL (-2.0): a masked or padded insert sorts ahead of
+# every live or sentinel list entry and is always dropped.
+NEG_INF = jnp.float32(-3.0)
+# Strictly above any real similarity / list value: column padding for the
+# Pallas path.  List values must lie in (NEG_INF, POS_INF).
+POS_INF = jnp.float32(4.0)
+
+
+def merge_insert_ref(vals: jax.Array, idx: jax.Array, ins_vals: jax.Array,
+                     ins_idx: jax.Array, ins_mask: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """(R, L) ascending lists + (R, k) burst-order inserts -> merged lists.
+
+    A stable argsort over the concatenated (R, L + k) block orders ties as
+    (value, age) — row entries first, then inserts in burst order, which is
+    exactly the order k sequential ``side="right"`` inserts produce — and
+    the first k positions are the dropped minima.
+    """
+    k = ins_vals.shape[1]
+    gated = jnp.where(ins_mask, ins_vals.astype(vals.dtype), NEG_INF)
+    mvals = jnp.concatenate([vals, gated], axis=1)
+    midx = jnp.concatenate([idx, ins_idx.astype(idx.dtype)], axis=1)
+    order = jnp.argsort(mvals, axis=1, stable=True)[:, k:]
+    return (jnp.take_along_axis(mvals, order, axis=1),
+            jnp.take_along_axis(midx, order, axis=1))

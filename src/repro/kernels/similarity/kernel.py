@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 EPS = 1e-12
 
 
@@ -72,7 +74,7 @@ def similarity_pallas(Q: jax.Array, R: jax.Array, q_norms: jax.Array,
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_norms, r_norms, Q, R)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _make_kernel(tol: float):
     def kernel(rows_ref, s0_ref, mask_ref, count_ref):
@@ -54,7 +56,7 @@ def twin_probe_pallas(probe_rows: jax.Array, sims0: jax.Array,
             jax.ShapeDtypeStruct((N, 1), jnp.bool_),
             jax.ShapeDtypeStruct((N // bn, 1), jnp.int32),
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(probe_rows, sims0[:, None])

@@ -1,0 +1,41 @@
+"""Optional-``hypothesis`` shim: real decorators when the package is
+installed, skip stubs otherwise.
+
+The tier-1 container ships without ``hypothesis``; a hard import makes
+pytest error at *collection*, taking every non-property test in the module
+down with it.  Importing ``given``/``settings``/``st`` from here keeps the
+example-based tests running everywhere and surfaces the property tests as
+explicit skips (they run in CI, which installs requirements-dev.txt).
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Replace the test with an argument-free skip stub (the original
+        body references strategy-driven arguments pytest can't supply)."""
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass                       # pragma: no cover
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; never executed."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

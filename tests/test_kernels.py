@@ -3,16 +3,17 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.kernels import (cosine_similarity, embedding_bag, twin_probe,
-                           verify_rows)
+from repro.kernels import (cosine_similarity, embedding_bag, merge_insert,
+                           twin_probe, verify_rows)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.list_merge.ref import merge_insert_ref
 from repro.kernels.similarity.ref import similarity_ref
 from repro.kernels.twin_probe.ref import twin_probe_ref
 from repro.kernels.verify_rows.ref import verify_rows_ref
+from tests.hypcompat import given, settings, st
 
 
 @pytest.mark.parametrize("nq,n,m", [(8, 16, 32), (37, 451, 300),
@@ -67,6 +68,61 @@ def test_embedding_bag_sweep(nb, hot, V, dim):
     out = embedding_bag(table, idx, w, mask)
     ref = embedding_bag_ref(table, idx, w * mask.astype(jnp.float32))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def _merge_case(rng, R, L, k):
+    """Sorted rows with sentinel heads + duplicate-heavy inserts."""
+    pool = np.concatenate([[-2.0, -2.0],
+                           np.round(rng.uniform(-1, 1, 8), 2)])
+    vals = np.sort(rng.choice(pool, size=(R, L)).astype(np.float32), axis=1)
+    idx = np.stack([rng.permutation(L).astype(np.int32) for _ in range(R)])
+    ins_vals = np.round(rng.uniform(-1.9, 1, (R, k)), 2).astype(np.float32)
+    ins_vals[0, 0] = vals[0, L // 2]             # tie vs an existing entry
+    if k > 1:
+        ins_vals[:, 1] = ins_vals[:, 0]          # tie between inserts
+    ins_idx = np.broadcast_to(1000 + np.arange(k, dtype=np.int32), (R, k))
+    ins_mask = rng.random((R, k)) < 0.7
+    return (jnp.asarray(vals), jnp.asarray(idx), jnp.asarray(ins_vals),
+            jnp.asarray(np.ascontiguousarray(ins_idx)),
+            jnp.asarray(ins_mask))
+
+
+@pytest.mark.parametrize("R,L,k", [(5, 12, 3), (9, 33, 7), (16, 64, 1),
+                                   (3, 8, 8), (11, 130, 30), (8, 128, 5)])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_merge_insert_sweep(R, L, k, use_pallas):
+    rng = np.random.default_rng(R * 1000 + L + k)
+    vals, idx, iv, ii, mask = _merge_case(rng, R, L, k)
+    out_v, out_i = merge_insert(vals, idx, iv, ii, mask,
+                                use_pallas=use_pallas)
+    ref_v, ref_i = merge_insert_ref(vals, idx, iv, ii, mask)
+    assert np.array_equal(np.asarray(out_v), np.asarray(ref_v))
+    assert np.array_equal(np.asarray(out_i), np.asarray(ref_i))
+    # merged rows stay ascending
+    assert bool(jnp.all(out_v[:, 1:] >= out_v[:, :-1]))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_merge_insert_equals_sequential(use_pallas):
+    """The batched merge == k sequential drop-min shift-inserts."""
+    rng = np.random.default_rng(7)
+    vals, idx, iv, ii, mask = _merge_case(rng, 6, 24, 5)
+    seq_v, seq_i = np.asarray(vals).copy(), np.asarray(idx).copy()
+    for t in range(5):
+        for r in range(6):
+            if not bool(mask[r, t]):
+                continue
+            s = float(iv[r, t])
+            p = int(np.searchsorted(seq_v[r], s, side="right"))
+            if p == 0:
+                continue                          # below min: dropped
+            seq_v[r] = np.concatenate([seq_v[r, 1:p], [s], seq_v[r, p:]])
+            seq_i[r] = np.concatenate([seq_i[r, 1:p], [int(ii[r, t])],
+                                       seq_i[r, p:]])
+    out_v, out_i = merge_insert(vals, idx, iv, ii, mask,
+                                use_pallas=use_pallas)
+    assert np.array_equal(np.asarray(out_v), seq_v.astype(np.float32))
+    assert np.array_equal(np.asarray(out_i), seq_i)
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,244 @@
+"""Burst-batched sorted-list maintenance: the fused k-way merge-insert must
+be element-wise identical to k sequential ``insert_into_lists`` calls in
+the interleaved append/insert flow, including edge cases (sentinel-head
+inserts, full-capacity rows, duplicate similarity values, k=1)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (build_state, baseline, insert_into_lists,
+                        insert_batch_into_lists, make_probes,
+                        merge_new_users_into_base, set0_cap, splice_twin,
+                        splice_twins, twin_sims_block)
+from repro.core.twinsearch import onboard_batch_buffered
+from tests.conftest import make_ratings
+
+
+def _seed_insert_np(vals, idx, sims, new_user, live):
+    """The seed repo's shift-gather insert, re-derived in numpy: the
+    independent sequential oracle every batched path is held to."""
+    out_v, out_i = vals.copy(), idx.copy()
+    for r in range(vals.shape[0]):
+        if not live[r]:
+            continue
+        s = sims[r]
+        p = np.searchsorted(vals[r], s, side="right")
+        if p == 0:
+            continue                                  # below min: dropped
+        out_v[r] = np.concatenate([vals[r, 1:p], [s], vals[r, p:]])
+        out_i[r] = np.concatenate([idx[r, 1:p], [new_user], idx[r, p:]])
+    return out_v, out_i
+
+
+def _interleaved_flow(R, R_new):
+    """Sequential reference: append each user then insert it into every
+    live list, one at a time — returns the final state and sims rows."""
+    n, k = R.shape[0], R_new.shape[0]
+    st = build_state(jnp.asarray(R), capacity_extra=k)
+    sims_rows = []
+    for t in range(k):
+        vals, idx, sims = baseline.build_list(st, jnp.asarray(R_new[t]))
+        st = baseline.append_user(st, jnp.asarray(R_new[t]), vals, idx)
+        st = insert_into_lists(st, jnp.int32(n + t), sims)
+        sims_rows.append(np.asarray(sims))
+    return st, np.stack(sims_rows)
+
+
+def _batched_flow(R, R_new, **kw):
+    """Append the whole burst, then one fused merge-insert."""
+    n, k = R.shape[0], R_new.shape[0]
+    st = build_state(jnp.asarray(R), capacity_extra=k)
+    for t in range(k):
+        vals, idx, _ = baseline.build_list(st, jnp.asarray(R_new[t]))
+        st = baseline.append_user(st, jnp.asarray(R_new[t]), vals, idx)
+    sims_block = []
+    # recompute each user's sims against the FINAL ratings (identical
+    # values: sims only involve rows that existed at that user's append)
+    for t in range(k):
+        st_t = st._replace(n_active=jnp.int32(n + t))
+        _, _, sims = baseline.build_list(st_t, jnp.asarray(R_new[t]))
+        sims_block.append(np.asarray(sims))
+    st = insert_batch_into_lists(st, n + jnp.arange(k, dtype=jnp.int32),
+                                 jnp.asarray(np.stack(sims_block)), **kw)
+    return st
+
+
+class TestBatchedInsert:
+    @pytest.mark.parametrize("k", [1, 4, 7])
+    def test_bit_identical_to_sequential(self, rng, k):
+        """Mixed burst (twins + fresh) over a state with sentinel slots."""
+        R = make_ratings(rng, n=40, m=16)
+        R_new = make_ratings(np.random.default_rng(3), n=k, m=16)
+        if k > 2:
+            R_new[2] = R[10]                        # planted twin
+        st_seq, _ = _interleaved_flow(R, R_new)
+        st_bat = _batched_flow(R, R_new)
+        assert np.array_equal(np.asarray(st_seq.sim_vals),
+                              np.asarray(st_bat.sim_vals))
+        assert np.array_equal(np.asarray(st_seq.sim_idx),
+                              np.asarray(st_bat.sim_idx))
+
+    def test_k1_degenerate_equals_insert_into_lists(self, rng):
+        """A one-user burst is exactly the single-user op."""
+        R = make_ratings(rng, n=30, m=12)
+        n = R.shape[0]
+        st = build_state(jnp.asarray(R), capacity_extra=1)
+        vals, idx, sims = baseline.build_list(st, jnp.asarray(R[4]))
+        st = baseline.append_user(st, jnp.asarray(R[4]), vals, idx)
+        a = insert_into_lists(st, jnp.int32(n), sims)
+        b = insert_batch_into_lists(st, jnp.asarray([n], jnp.int32),
+                                    sims[None, :])
+        assert np.array_equal(np.asarray(a.sim_vals), np.asarray(b.sim_vals))
+        assert np.array_equal(np.asarray(a.sim_idx), np.asarray(b.sim_idx))
+
+    def test_insert_matches_seed_oracle(self, rng):
+        """The rewritten single insert == the seed's shift-gather math,
+        including the sentinel-head slot it consumes."""
+        R = make_ratings(rng, n=25, m=10)
+        n = R.shape[0]
+        st = build_state(jnp.asarray(R), capacity_extra=2)
+        vals, idx, sims = baseline.build_list(st, jnp.asarray(R[6]))
+        st = baseline.append_user(st, jnp.asarray(R[6]), vals, idx)
+        got = insert_into_lists(st, jnp.int32(n), sims)
+        rows = np.arange(st.capacity)
+        live = (rows < int(st.n_active)) & (rows != n)
+        want_v, want_i = _seed_insert_np(
+            np.asarray(st.sim_vals), np.asarray(st.sim_idx),
+            np.asarray(sims), n, live)
+        assert np.array_equal(np.asarray(got.sim_vals), want_v)
+        assert np.array_equal(np.asarray(got.sim_idx), want_i)
+
+    def test_full_capacity_drops_minimum(self, rng):
+        """No sentinel slack: each insert evicts the row's current minimum,
+        and a value below the minimum is itself dropped (exact no-op)."""
+        R = make_ratings(rng, n=20, m=8)
+        st = build_state(jnp.asarray(R), capacity_extra=0)  # zero slack
+        sims = np.asarray(
+            jnp.take_along_axis(st.sim_vals, jnp.zeros((20, 1), jnp.int32),
+                                axis=1))[:, 0]
+        # half the rows get a value above their min, half strictly below
+        ins = np.where(np.arange(20) % 2 == 0, 0.5, -1.99).astype(np.float32)
+        live = np.ones(20, bool)
+        want_v, want_i = _seed_insert_np(np.asarray(st.sim_vals),
+                                         np.asarray(st.sim_idx),
+                                         ins, 20, live)
+        # below-min rows must be untouched
+        assert np.array_equal(want_v[1], np.asarray(st.sim_vals)[1])
+        got = insert_batch_into_lists(
+            st._replace(n_active=jnp.int32(20)),
+            jnp.asarray([20], jnp.int32), jnp.asarray(ins)[None, :])
+        # new_users=20 > every row id: all rows live, matching `live`
+        assert np.array_equal(np.asarray(got.sim_vals), want_v)
+        assert np.array_equal(np.asarray(got.sim_idx), want_i)
+        del sims
+
+    def test_duplicate_values_keep_burst_order(self, rng):
+        """Equal sims within the burst and against stored entries: newer
+        entries land to the right of older equals (side='right')."""
+        R = make_ratings(rng, n=30, m=12)
+        n = R.shape[0]
+        k = 3
+        R_new = np.tile(R[5][None, :], (k, 1))      # identical burst
+        st_seq, _ = _interleaved_flow(R, R_new)
+        st_bat = _batched_flow(R, R_new)
+        assert np.array_equal(np.asarray(st_seq.sim_vals),
+                              np.asarray(st_bat.sim_vals))
+        assert np.array_equal(np.asarray(st_seq.sim_idx),
+                              np.asarray(st_bat.sim_idx))
+
+
+class TestSpliceTwins:
+    def test_vectorised_equals_single_splices(self, rng):
+        R = make_ratings(rng, n=35, m=14)
+        n = R.shape[0]
+        k = 3
+        twins = [4, 11, 4]
+        R_new = np.stack([R[t] for t in twins])
+        st = build_state(jnp.asarray(R), capacity_extra=k)
+        for t in range(k):
+            vals, idx, _ = baseline.build_list(st, jnp.asarray(R_new[t]))
+            st = baseline.append_user(st, jnp.asarray(R_new[t]), vals, idx)
+        a = st
+        for t in range(k):
+            a = splice_twin(a._replace(n_active=jnp.int32(n + t + 1)),
+                            jnp.int32(n + t), jnp.int32(twins[t]))
+        a = a._replace(n_active=st.n_active)
+        b = splice_twins(st, n + jnp.arange(k, dtype=jnp.int32),
+                         jnp.asarray(twins, jnp.int32))
+        assert np.array_equal(np.asarray(a.sim_vals), np.asarray(b.sim_vals))
+        assert np.array_equal(np.asarray(a.sim_idx), np.asarray(b.sim_idx))
+
+    def test_twin_sims_block_gathers_stored_values(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        st = build_state(jnp.asarray(R), capacity_extra=0)
+        blk = np.asarray(twin_sims_block(st, jnp.asarray([3, 7], jnp.int32)))
+        S = np.asarray(st.sim_vals)
+        I = np.asarray(st.sim_idx)
+        for ti, tw in enumerate((3, 7)):
+            for x in (0, 9, 19):
+                pos = int(np.argmax(I[x] == tw))
+                assert blk[ti, x] == S[x, pos]
+
+
+class TestBufferedMaintain:
+    def test_maintained_base_lists_match_arena_flow(self, rng):
+        """onboard_batch_buffered(maintain=True) == the mutable-arena
+        interleaved flow on every base row (same sims -> bit-exact)."""
+        R = make_ratings(rng, n=48, m=16)
+        n = R.shape[0]
+        k = 4
+        fresh = make_ratings(np.random.default_rng(9), n=1, m=16)[0]
+        R_new = np.stack([R[17], fresh, R[17], fresh])
+        st_seq, _ = _interleaved_flow(R, R_new)
+        base = build_state(jnp.asarray(R), capacity_extra=0)
+        probes = make_probes(jax.random.PRNGKey(0), k, 6, n)
+        _, _, _, (mv, mi) = onboard_batch_buffered(
+            base, jnp.asarray(R_new), probes, s_max=set0_cap(n),
+            maintain=True)
+        np.testing.assert_allclose(np.asarray(mv),
+                                   np.asarray(st_seq.sim_vals[:n]),
+                                   atol=2e-5)
+        # every base row now lists each new user exactly once
+        for u in (0, 23, 47):
+            ids = np.asarray(mi[u])
+            for t in range(k):
+                assert (ids == n + t).sum() == 1
+
+    def test_merge_new_users_consumes_all_sentinel_pads(self, rng):
+        R = make_ratings(rng, n=16, m=8)
+        st = build_state(jnp.asarray(R), capacity_extra=0)
+        k = 3
+        sims_block = np.asarray(
+            np.random.default_rng(2).uniform(-1, 1, (k, 16)),
+            dtype=np.float32)
+        mv, mi = merge_new_users_into_base(
+            st.sim_vals, st.sim_idx, jnp.asarray(sims_block),
+            16 + jnp.arange(k, dtype=jnp.int32))
+        assert mv.shape == (16, 16 + k)
+        assert not bool(jnp.any(mi == -1))          # pad idx never surfaces
+        assert bool(jnp.all(mv[:, 1:] >= mv[:, :-1]))
+
+
+class TestFusedTraditional:
+    def test_fused_matches_sequential_scan(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        k = 5
+        R_new = make_ratings(np.random.default_rng(4), n=k, m=16)
+        R_new[1] = R[7]
+        st_a = baseline.onboard_batch_traditional(
+            build_state(jnp.asarray(R), capacity_extra=k),
+            jnp.asarray(R_new), fused=False)
+        st_b = baseline.onboard_batch_traditional(
+            build_state(jnp.asarray(R), capacity_extra=k),
+            jnp.asarray(R_new), fused=True)
+        assert int(st_a.n_active) == int(st_b.n_active)
+        assert np.array_equal(np.asarray(st_a.ratings),
+                              np.asarray(st_b.ratings))
+        np.testing.assert_allclose(np.asarray(st_a.norms),
+                                   np.asarray(st_b.norms), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_a.sim_vals),
+                                   np.asarray(st_b.sim_vals), atol=2e-5)

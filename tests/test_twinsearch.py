@@ -3,10 +3,11 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
+
+from tests.hypcompat import given, settings, st
 
 from repro.core import (build_state, make_probes, onboard_batch,
                         onboard_batch_traditional, set0_cap,

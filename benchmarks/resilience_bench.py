@@ -1,0 +1,92 @@
+"""Resilience-layer overhead: what fault tolerance costs the hot path.
+
+Three questions, answered in wall time:
+
+  * **guard**: per-request validation cost on ``onboard_user`` /
+    ``add_rating`` — the tax every well-formed request pays;
+  * **rotation**: arena rotation (scatter-recover + gate + k-way merge,
+    zero similarity recompute) vs a fresh ``build_state`` over the same
+    active set.  Rotation trades the rebuild's O(n^2 m) similarity
+    recompute for O(n L log L) sorts, so its advantage grows with the
+    item count m; at the small m benchmarked here the two are close;
+  * **health**: the ``arena_healthy`` invariant sweep + an in-memory
+    snapshot — the per-``check_every`` cost of poison detection.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, time_call
+from repro.core import build_state, rotate_arena
+from repro.kernels.verify_rows.ops import arena_healthy
+from repro.serving import CFServer
+from repro.serving.guard import validate_ratings_vector
+
+
+def _ratings(rng, n, m, density=0.3):
+    R = (rng.integers(1, 6, (n, m)) * (rng.random((n, m)) < density)
+         ).astype(np.float32)
+    R[R.sum(axis=1) == 0, 0] = 3.0
+    return R
+
+
+def _median(fn, repeats=5):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def main(csv: CSV) -> None:
+    rng = np.random.default_rng(0)
+    n, m, extra = 2000, 200, 64
+    R = _ratings(rng, n, m)
+
+    # -- guard: validation cost per request (pure host-side numpy) -------
+    r = R[7]
+    t = _median(lambda: validate_ratings_vector(
+        r, n_items=m, rating_range=(1.0, 5.0)), repeats=50)
+    csv.add("guard/validate_vector", t, f"m={m}")
+
+    srv = CFServer(R, capacity_extra=extra, c_probes=8)
+    t = _median(lambda: srv.add_rating(5, 3, 4.0), repeats=20)
+    csv.add("guard/add_rating_guarded", t, "incl. cache update")
+
+    # -- rotation vs fresh build over the same active set ----------------
+    for k in (16, 64):
+        srv = CFServer(R, capacity_extra=k, c_probes=8,
+                       snapshot_every=10**9, check_every=10**9)
+        for i in range(k):
+            srv.onboard_user(R[rng.integers(0, n)])
+        st = srv.state
+        n_act = int(st.n_active)
+        t_rot = time_call(
+            lambda s: rotate_arena(s, n_base=n, extra=extra), st)
+        csv.add(f"rotation/rotate_k{k}", t_rot, f"n_act={n_act}")
+        active = np.asarray(st.ratings[:n_act])
+        t_fresh = time_call(
+            lambda a: build_state(jnp.asarray(a), capacity_extra=extra),
+            active)
+        csv.add(f"rotation/fresh_build_k{k}", t_fresh,
+                f"fresh/rotate={t_fresh / t_rot:.2f}x")
+
+    # -- health check + snapshot cadence cost ----------------------------
+    st = srv.state
+    t = time_call(lambda s: arena_healthy(s.sim_vals, s.ratings, s.norms,
+                                          s.n_active), st)
+    csv.add("health/arena_healthy", t, f"cap={st.capacity}")
+    t = _median(srv._take_snapshot, repeats=5)
+    csv.add("health/snapshot_mem", t, "in-memory tuple")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    main(c)

@@ -6,6 +6,8 @@
   kernel_bench       hot-spot micro-benchmarks
   maintenance_bench  burst-batched k-way merge-insert vs k sequential
                      inserts (bit-exactness asserted), k in {1,5,10,20,30}
+  resilience_bench   fault-tolerance overhead: request-guard tax, arena
+                     rotation vs fresh rebuild, health-check + snapshot
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full-scale
 cells come from ``python -m repro.launch.dryrun --all`` +
@@ -21,18 +23,21 @@ from benchmarks.common import CSV
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["twinsearch", "setsize", "scaling",
-                                       "kernel", "maintenance"], default=None)
+                                       "kernel", "maintenance",
+                                       "resilience"], default=None)
     args, _ = ap.parse_known_args()
 
     csv = CSV()
     csv.header()
-    from benchmarks import (kernel_bench, maintenance_bench, scaling_bench,
-                            setsize_bench, twinsearch_bench)
+    from benchmarks import (kernel_bench, maintenance_bench,
+                            resilience_bench, scaling_bench, setsize_bench,
+                            twinsearch_bench)
     todo = {
         "setsize": setsize_bench.main,
         "scaling": scaling_bench.main,
         "kernel": kernel_bench.main,
         "maintenance": maintenance_bench.main,
+        "resilience": resilience_bench.main,
         "twinsearch": twinsearch_bench.main,
     }
     for name, fn in todo.items():

@@ -41,8 +41,8 @@ def main() -> None:
         srv2.onboard_user(burst[i], use_twinsearch=False)
     med = lambda xs: sorted(xs)[len(xs) // 2]            # noqa: E731
     # steady-state medians (first call on each path pays jit compile)
-    t_tw = med(srv.stats.onboard_ms[1:])
-    t_tr = med(srv2.stats.onboard_ms[1:])
+    t_tw = med(list(srv.stats.onboard_ms)[1:])
+    t_tr = med(list(srv2.stats.onboard_ms)[1:])
     print(f"   per-user p50: traditional {t_tr:.1f}ms vs twinsearch "
           f"{t_tw:.1f}ms ({t_tr / max(t_tw, 1e-9):.1f}x)")
     print("   (MovieLens is small — the gap grows with n·m; see "

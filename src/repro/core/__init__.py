@@ -18,6 +18,7 @@ from repro.core.maintenance import (insert_into_lists,
                                     insert_batch_into_lists,
                                     merge_new_users_into_base, splice_twin,
                                     splice_twins, twin_sims_block)
+from repro.core.rotation import rotate_arena, unsorted_rows
 
 __all__ = [
     "CFState", "OnboardStats", "TwinResult", "SENTINEL", "SENTINEL_GATE",
@@ -29,5 +30,5 @@ __all__ = [
     "onboard_batch", "make_probes", "probe_sims", "candidate_mask",
     "verify_candidates", "insert_into_lists", "insert_batch_into_lists",
     "merge_new_users_into_base", "splice_twin", "splice_twins",
-    "twin_sims_block",
+    "twin_sims_block", "rotate_arena", "unsorted_rows",
 ]

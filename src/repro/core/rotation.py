@@ -1,0 +1,138 @@
+"""Arena rotation: grow a full ``CFState`` into a larger one without
+recomputing a single similarity.
+
+The serving arena is fixed-capacity (N = n_base + k_cap) so every mutating
+op stays jit-able with static shapes.  When a traffic burst fills all
+``k_cap`` onboarding slots the old behaviour was to raise — exactly at the
+moment the paper's fast path is paying off.  Rotation instead *compacts*
+the write region into a new, larger base arena:
+
+  * the k onboarded users' own lists already hold sim(u_t, x) for every
+    base row x — their unsorted rows are recovered by scattering each
+    sorted list back through its permutation (pure data movement);
+  * every base row receives all k new entries in ONE fused k-way
+    merge-insert (PR 1's ``merge_new_users_into_base``) fed by that
+    recovered block — O(N·(N + k)) total instead of k·O(N²), and zero
+    similarity recompute;
+  * the burst block's mutual similarities are completed by symmetry
+    (sim(u_t, u_s) is stored in whichever of the two rows was appended
+    later) and each new row gains its self-entry, making the k users
+    first-class base citizens;
+  * ``extra`` fresh all-sentinel slots are appended as the new write
+    region.
+
+Everything is a rearrangement of values already in the arena, so the
+rotated lists are bit-exact to what the sequential insert flow would have
+produced (asserted against a numpy re-sort oracle in
+``tests/test_resilience.py``) and match a fresh traditional build to float
+tolerance (stored sims came from ``cosine_vs_all``; a fresh build's
+``cosine_matrix`` rounds differently).
+
+Rows refreshed mid-epoch by ``add_rating`` re-sort over the *current*
+active set and may therefore already contain write-region entries; rotation
+gates those out before the merge so no row ends up with duplicates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CFState, SENTINEL, SENTINEL_GATE
+from repro.core.maintenance import merge_new_users_into_base
+
+
+def unsorted_rows(sim_vals: jax.Array, sim_idx: jax.Array,
+                  rows: jax.Array) -> jax.Array:
+    """(k, N) unsorted similarity rows recovered from sorted lists.
+
+    Each row's ``sim_idx`` is a permutation of 0..N-1 (argsort output), so
+    scattering the sorted values back through it reconstructs the original
+    column order; sentinel entries land on the columns that were inactive
+    at the row's build."""
+    N = sim_vals.shape[1]
+
+    def one(v: jax.Array, i: jax.Array) -> jax.Array:
+        return jnp.full((N,), SENTINEL, v.dtype).at[i].set(v)
+
+    return jax.vmap(one)(sim_vals[rows], sim_idx[rows])
+
+
+def _fit_width(vals: jax.Array, idx: jax.Array,
+               width: int) -> tuple[jax.Array, jax.Array]:
+    """Pad (head sentinels) or trim (head entries, sentinels by
+    construction) ascending lists to ``width`` columns."""
+    rows, cur = vals.shape
+    if cur == width:
+        return vals, idx
+    if cur < width:
+        pad_v = jnp.full((rows, width - cur), SENTINEL, vals.dtype)
+        pad_i = jnp.full((rows, width - cur), -1, idx.dtype)
+        return (jnp.concatenate([pad_v, vals], axis=1),
+                jnp.concatenate([pad_i, idx], axis=1))
+    return vals[:, cur - width:], idx[:, cur - width:]
+
+
+def rotate_arena(state: CFState, *, n_base: int, extra: int,
+                 use_pallas: bool | None = None) -> CFState:
+    """Compact the write region [n_base, n_active) into a new base arena of
+    capacity ``n_active + extra``.  Rotation is rare (once per k_cap
+    onboards) and runs un-jitted at the top level; the merge underneath is
+    the jitted ``merge_insert`` op."""
+    n_act = int(state.n_active)
+    k = n_act - n_base
+    n_new = n_act + extra
+    m = state.n_items
+
+    ratings = jnp.concatenate([
+        state.ratings[:n_act],
+        jnp.zeros((extra, m), state.ratings.dtype)], axis=0)
+    norms = jnp.concatenate([
+        state.norms[:n_act], jnp.zeros((extra,), state.norms.dtype)])
+
+    if k == 0:                               # pure growth, nothing to merge
+        base_v, base_i = _fit_width(state.sim_vals[:n_act],
+                                    state.sim_idx[:n_act], n_new)
+    else:
+        buf = jnp.arange(n_base, n_act, dtype=jnp.int32)
+        U = unsorted_rows(state.sim_vals, state.sim_idx, buf)    # (k, N)
+
+        # Base rows: gate out any write-region entries (rows refreshed by
+        # add_rating already carry them), stable re-sort so the gated lists
+        # are ascending again, then merge the whole burst in one pass.
+        gate = state.sim_idx[:n_base] < n_base
+        gv = jnp.where(gate, state.sim_vals[:n_base], SENTINEL)
+        gi = jnp.where(gate, state.sim_idx[:n_base], -1)
+        order = jnp.argsort(gv, axis=1, stable=True)
+        gv = jnp.take_along_axis(gv, order, axis=1)
+        gi = jnp.take_along_axis(gi, order, axis=1)
+        mv, mi = merge_new_users_into_base(
+            gv, gi, U[:, :n_base], buf, use_pallas=use_pallas)
+        mv, mi = _fit_width(mv, mi.astype(jnp.int32), n_new)
+
+        # Burst rows: base entries come straight from the recovered block;
+        # burst-internal entries complete by symmetry (row u_t holds
+        # sim(u_t, u_s) only for s < t — the transpose holds the rest);
+        # the self-entry a fresh build would carry is exactly 1.
+        C = U[:, n_base:n_act]                               # (k, k)
+        C = jnp.where(C > SENTINEL_GATE, C, jnp.swapaxes(C, 0, 1))
+        C = C.at[jnp.arange(k), jnp.arange(k)].set(1.0)
+        W = jnp.full((k, n_new), SENTINEL, jnp.float32)
+        W = W.at[:, :n_base].set(U[:, :n_base].astype(jnp.float32))
+        W = W.at[:, n_base:n_act].set(C.astype(jnp.float32))
+        bi = jnp.argsort(W, axis=1, stable=True).astype(jnp.int32)
+        bv = jnp.take_along_axis(W, bi, axis=1)
+        base_v = jnp.concatenate([mv.astype(jnp.float32), bv], axis=0)
+        base_i = jnp.concatenate([mi, bi], axis=0)
+
+    # Fresh write region: all-sentinel rows with identity permutations
+    # (what ``build_state`` gives inactive slots).
+    empty_v = jnp.full((extra, n_new), SENTINEL, jnp.float32)
+    empty_i = jnp.broadcast_to(jnp.arange(n_new, dtype=jnp.int32),
+                               (extra, n_new))
+    return CFState(
+        ratings=ratings,
+        norms=norms,
+        sim_vals=jnp.concatenate([base_v, empty_v], axis=0),
+        sim_idx=jnp.concatenate([base_i, empty_i], axis=0),
+        n_active=jnp.asarray(n_act, jnp.int32),
+    )

@@ -9,3 +9,12 @@ def verify_rows_ref(C: jax.Array, r0: jax.Array,
                     valid: jax.Array) -> jax.Array:
     eq = jnp.all(C == r0[None, :], axis=1)
     return (eq & valid)[:, None]
+
+
+def rows_sorted_finite_ref(vals: jax.Array, live: jax.Array) -> jax.Array:
+    """Numpy-style oracle for the arena invariant: every live row is finite
+    and ascending (sentinel head included — sentinels are the minimum)."""
+    finite = jnp.all(jnp.isfinite(vals) | ~live[:, None], axis=1)
+    ascending = jnp.all((jnp.diff(vals, axis=1) >= 0) | ~live[:, None],
+                        axis=1)
+    return finite & ascending

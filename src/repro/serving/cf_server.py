@@ -1,22 +1,49 @@
 """Neighbourhood-CF recommendation server with the paper's TwinSearch
-new-user onboarding fast path.
+new-user onboarding fast path, hardened for bursty production traffic.
 
 Request surface (what a real deployment fronts with an RPC layer):
 
   * ``onboard_user(ratings)``   — TwinSearch -> copy, or traditional build
-                                  fallback; returns the new user id + stats.
+                                  fallback; returns the new user id + info.
   * ``recommend(user, n)``      — top-n unseen items via kNN scores.
   * ``predict(user, item)``     — kNN weighted-average rating.
   * ``add_rating(user, item, r)``— incremental (Papagelis-style) update of
                                   the affected similarity row.
 
+Resilience contract: **no public entrypoint raises to the caller.**
+
+  * Malformed payloads (NaN/Inf, wrong shape/dtype, out-of-range, bogus
+    ids) are refused by ``serving/guard.py`` before touching any jitted
+    kernel and land in a bounded quarantine; the caller gets a structured
+    refusal (``status="rejected"``).
+  * Capacity exhaustion triggers **arena rotation**
+    (``core/rotation.py``): the write region compacts into a larger base
+    arena via PR 1's fused k-way merge — onboarding continues past the
+    original ``capacity_extra`` indefinitely.
+  * Onboard latencies feed a ``StragglerMonitor`` (``training/elastic.py``)
+    driving a **degradation ladder**: twinsearch -> traditional-build ->
+    shed-with-backpressure, stepping down on straggler verdicts and back
+    up after a healthy streak (shed expires on a cooldown clock).  Every
+    transition is counted in ``ServerStats``.
+  * The jitted onboard call runs under retry-with-exponential-backoff and
+    a deadline (transient executor faults); a call that still fails is
+    quarantined, not raised.
+  * Periodic atomic **snapshots** (in-memory always; on disk via
+    ``training/checkpoint.py`` when ``snapshot_dir`` is set) pair with a
+    cheap NaN/ordering invariant check (``kernels/verify_rows``): a
+    poisoned arena — bit-flips, simulated shard loss — is detected within
+    ``check_every`` onboards and rolled back to the last good snapshot.
+
 State is the fixed-capacity ``CFState`` (jit-friendly); all mutating ops
-are jitted once and reused.  ``stats`` tracks twin hits / fallbacks /
-latencies — the serving-side visibility the benchmarks read.
+are jitted once per arena shape and reused.  ``stats`` tracks twin hits /
+fallbacks / latencies / resilience transitions — the serving-side
+visibility the benchmarks read.
 """
 from __future__ import annotations
 
+import logging
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -28,6 +55,21 @@ from repro.core import (CFState, build_state, knn, set0_cap)
 from repro.core import baseline as base_lib
 from repro.core import twinsearch as ts
 from repro.core import update as upd_lib
+from repro.core.rotation import rotate_arena
+from repro.kernels.verify_rows.ops import arena_healthy
+from repro.serving import guard
+from repro.training import checkpoint
+from repro.training.elastic import Action, StragglerMonitor
+
+log = logging.getLogger(__name__)
+
+# Degradation ladder levels (ascending = more degraded).
+LEVEL_TWINSEARCH = 0
+LEVEL_TRADITIONAL = 1
+LEVEL_SHED = 2
+LEVEL_NAMES = {LEVEL_TWINSEARCH: "twinsearch",
+               LEVEL_TRADITIONAL: "traditional",
+               LEVEL_SHED: "shed"}
 
 
 @dataclass
@@ -36,7 +78,22 @@ class ServerStats:
     twin_hits: int = 0
     fallbacks: int = 0
     overflows: int = 0
-    onboard_ms: list[float] = field(default_factory=list)
+    rejected: int = 0
+    shed: int = 0
+    retries: int = 0
+    errors: int = 0
+    rotations: int = 0
+    snapshots: int = 0
+    rollbacks: int = 0
+    degradations: int = 0
+    recoveries: int = 0
+    latency_window: int = 1024
+    onboard_ms: deque = field(init=False)
+
+    def __post_init__(self) -> None:
+        # Fixed-size ring buffer: sustained traffic must not grow host
+        # memory; summary() percentiles are over the trailing window.
+        self.onboard_ms = deque(maxlen=self.latency_window)
 
     def summary(self) -> dict:
         ms = sorted(self.onboard_ms) or [0.0]
@@ -45,6 +102,15 @@ class ServerStats:
             "twin_hits": self.twin_hits,
             "fallbacks": self.fallbacks,
             "overflows": self.overflows,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "retries": self.retries,
+            "errors": self.errors,
+            "rotations": self.rotations,
+            "snapshots": self.snapshots,
+            "rollbacks": self.rollbacks,
+            "degradations": self.degradations,
+            "recoveries": self.recoveries,
             "onboard_p50_ms": ms[len(ms) // 2],
             "onboard_p99_ms": ms[min(len(ms) - 1, int(len(ms) * 0.99))],
         }
@@ -53,75 +119,282 @@ class ServerStats:
 class CFServer:
     def __init__(self, ratings: np.ndarray, *, capacity_extra: int = 64,
                  c_probes: int = 8, sim_tol: float = 1e-6,
-                 measure: str = "cosine", seed: int = 0):
+                 measure: str = "cosine", seed: int = 0,
+                 rating_range: tuple[float, float] = (1.0, 5.0),
+                 quarantine_capacity: int = 256,
+                 latency_window: int = 1024,
+                 retry: guard.RetryPolicy | None = None,
+                 monitor: StragglerMonitor | None = None,
+                 recover_after: int = 32,
+                 shed_cooldown_s: float = 1.0,
+                 snapshot_every: int = 64,
+                 snapshot_dir: str | None = None,
+                 snapshot_keep: int = 3,
+                 check_every: int = 8):
         self.n_base = int(ratings.shape[0])
         self.k_cap = int(capacity_extra)
         self.c = c_probes
         self.tol = sim_tol
-        self.s_max = set0_cap(self.n_base)
+        self.rating_range = (float(rating_range[0]), float(rating_range[1]))
         self.state: CFState = jax.jit(
             lambda R: build_state(R, capacity_extra=capacity_extra,
                                   measure=measure))(jnp.asarray(
                                       ratings, jnp.float32))
         self._key = jax.random.PRNGKey(seed)
-        self.stats = ServerStats()
+        self.stats = ServerStats(latency_window=latency_window)
+        self.quarantine = guard.Quarantine(capacity=quarantine_capacity)
 
+        # Degradation ladder + retry machinery.  The monitor's clock is the
+        # server's time source for shed cooldowns too, so fault-injection
+        # tests drive the whole ladder in virtual time.
+        self.retry = retry or guard.RetryPolicy()
+        self.monitor = monitor or StragglerMonitor(
+            window=64, straggler_ratio=4.0, hang_timeout_s=30.0,
+            consecutive_to_shrink=3)
+        self._clock = self.monitor.clock
+        self.level = LEVEL_TWINSEARCH
+        self.recover_after = int(recover_after)
+        self.shed_cooldown_s = float(shed_cooldown_s)
+        self._healthy_streak = 0
+        self._shed_until = 0.0
+
+        # Snapshot / rollback machinery.
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_keep = int(snapshot_keep)
+        self.check_every = int(check_every)
+        self._since_snapshot = 0
+        self._since_check = 0
+
+        # All jitted entrypoints are constructed eagerly (construction is
+        # free — tracing happens on first call) so a first-call exception
+        # can never leave the server half-initialised; the update cache is
+        # still *computed* lazily (it is O(N^2) memory).
+        self._cache = None
+        self._build_jits()
+        self._snapshot = None
+        self._take_snapshot()            # the construction-time good state
+
+    # -- internal machinery -------------------------------------------------
+
+    def _build_jits(self) -> None:
+        """(Re)wrap the jitted ops for the *current* arena geometry.
+        Called at construction and after every rotation/rollback — the
+        closures capture ``n_base``/``s_max``/``k_cap``, which rotation
+        changes."""
+        self.s_max = set0_cap(self.n_base)
+        n_base, k_cap = self.n_base, self.k_cap
         self._onboard = jax.jit(lambda st, r0, probes: ts.onboard_twinsearch(
-            st, r0, probes, s_max=self.s_max, n_base=self.n_base,
-            k_cap=self.k_cap, tol=self.tol))
+            st, r0, probes, s_max=self.s_max, n_base=n_base,
+            k_cap=k_cap, tol=self.tol))
         self._onboard_trad = jax.jit(base_lib.onboard_traditional)
         self._recommend = jax.jit(knn.recommend,
                                   static_argnames=("k_neighbors", "n_rec"))
         self._predict = jax.jit(knn.predict, static_argnames=("k",))
+        self._init_cache = jax.jit(upd_lib.init_cache)
+        self._add = jax.jit(upd_lib.add_rating)
+        self._healthy = arena_healthy
+
+    def _reject(self, kind: str, reason: str, payload=None,
+                detail: str = "") -> dict:
+        self.stats.rejected += 1
+        self.quarantine.record(kind, reason, payload, detail)
+        return {"status": "rejected", "reason": reason}
+
+    def _set_level(self, level: int) -> None:
+        if level == self.level:
+            return
+        if level > self.level:
+            self.stats.degradations += 1
+            log.warning("degrading %s -> %s", LEVEL_NAMES[self.level],
+                        LEVEL_NAMES[level])
+        else:
+            self.stats.recoveries += 1
+            log.info("recovering %s -> %s", LEVEL_NAMES[self.level],
+                     LEVEL_NAMES[level])
+        self.level = level
+        self._healthy_streak = 0
+        if level == LEVEL_SHED:
+            self._shed_until = self._clock() + self.shed_cooldown_s
+
+    def _apply_monitor(self, action: Action) -> None:
+        if action is Action.ABORT:
+            # A hang-scale latency: shed immediately, don't walk the ladder.
+            self._set_level(LEVEL_SHED)
+        elif action is Action.CHECKPOINT_AND_SHRINK:
+            self._set_level(min(self.level + 1, LEVEL_SHED))
+        else:
+            self._healthy_streak += 1
+            if (self.level > LEVEL_TWINSEARCH
+                    and self._healthy_streak >= self.recover_after):
+                self._set_level(self.level - 1)
+
+    def _rotate(self) -> None:
+        """Grow the arena: compact the write region into a new base (see
+        ``core/rotation.py``) and retarget every jitted op at the new
+        geometry.  The incremental-update cache keys on the old shapes and
+        is dropped."""
+        old_capacity = self.state.capacity
+        self.state = rotate_arena(self.state, n_base=self.n_base,
+                                  extra=self.k_cap)
+        self.n_base = int(self.state.n_active)
         self._cache = None
+        self._build_jits()
+        self.stats.rotations += 1
+        log.info("arena rotated: capacity %d -> %d (n_base=%d)",
+                 old_capacity, self.state.capacity, self.n_base)
+
+    def _take_snapshot(self) -> None:
+        self._snapshot = (self.state, self.n_base)
+        self.stats.snapshots += 1
+        self._since_snapshot = 0
+        if self.snapshot_dir is not None:
+            checkpoint.save(self.snapshot_dir, self.stats.onboarded,
+                            self.state,
+                            extra={"n_base": self.n_base},
+                            keep_last=self.snapshot_keep)
+
+    def _rollback(self) -> None:
+        state, n_base = self._snapshot
+        geometry_changed = (state.capacity != self.state.capacity
+                            or n_base != self.n_base)
+        self.state, self.n_base = state, n_base
+        self._cache = None
+        if geometry_changed:
+            self._build_jits()
+        self.stats.rollbacks += 1
+        self._since_check = 0
+        self._since_snapshot = 0
+        log.error("arena invariant violated; rolled back to last good "
+                  "snapshot (n_active=%d)", int(state.n_active))
+
+    def _check_and_snapshot(self) -> bool:
+        """Periodic poison detection + snapshot cadence.  Returns False if
+        the current state failed the invariant and was rolled back."""
+        self._since_check += 1
+        self._since_snapshot += 1
+        if self._since_check >= self.check_every:
+            self._since_check = 0
+            if not bool(self._healthy(self.state.sim_vals,
+                                      self.state.ratings, self.state.norms,
+                                      self.state.n_active)):
+                self._rollback()
+                return False
+        if self._since_snapshot >= self.snapshot_every:
+            # Never snapshot unverified state: a snapshot of a poisoned
+            # arena would poison every future rollback.
+            if bool(self._healthy(self.state.sim_vals, self.state.ratings,
+                                  self.state.norms, self.state.n_active)):
+                self._take_snapshot()
+        return True
 
     # -- onboarding ---------------------------------------------------------
 
     def onboard_user(self, ratings: np.ndarray, *,
                      use_twinsearch: bool = True) -> tuple[int, dict]:
+        reason = guard.validate_ratings_vector(
+            ratings, n_items=self.state.n_items,
+            rating_range=self.rating_range)
+        if reason is not None:
+            return -1, {**self._reject("onboard", reason, ratings),
+                        "twin_found": False}
+
+        if self.level == LEVEL_SHED:
+            if self._clock() < self._shed_until:
+                self.stats.shed += 1
+                return -1, {"status": "shed", "twin_found": False,
+                            "retry_after_s": self._shed_until - self._clock()}
+            # Cooldown expired: probe the cheaper build path again.
+            self._set_level(LEVEL_TRADITIONAL)
+
         if int(self.state.n_active) >= self.state.capacity:
-            raise RuntimeError("capacity exhausted; grow the state "
-                               "(production: rotate to a larger arena)")
-        r0 = jnp.asarray(ratings, jnp.float32)
-        t0 = time.perf_counter()
-        if use_twinsearch:
+            self._rotate()
+
+        r0 = jnp.asarray(np.asarray(ratings, dtype=np.float32))
+        use_twin = use_twinsearch and self.level == LEVEL_TWINSEARCH
+        if use_twin:
             self._key, sub = jax.random.split(self._key)
             probes = jax.random.randint(sub, (self.c,), 0, self.n_base)
-            new_state, res = self._onboard(self.state, r0, probes)
-            found = bool(res.found)
-            self.stats.twin_hits += found
-            self.stats.fallbacks += not found
-            self.stats.overflows += bool(res.overflowed)
+
+            def run():
+                new_state, res = self._onboard(self.state, r0, probes)
+                new_state.n_active.block_until_ready()
+                return new_state, bool(res.found), bool(res.overflowed)
         else:
-            new_state = self._onboard_trad(self.state, r0)
-            self.stats.fallbacks += 1
-            found = False
-        new_state.n_active.block_until_ready()
+            def run():
+                new_state = self._onboard_trad(self.state, r0)
+                new_state.n_active.block_until_ready()
+                return new_state, False, False
+
+        self.monitor.step_started()
+        t0 = time.perf_counter()
+        try:
+            (new_state, found, overflowed), retries = guard.call_with_retry(
+                run, self.retry)
+        except Exception as e:          # noqa: BLE001 — contract: no raise
+            self.monitor.step_finished()
+            self.stats.errors += 1
+            self.quarantine.record("onboard", guard.R_ERROR, ratings,
+                                   detail=repr(e))
+            log.error("onboard failed after retries: %r", e)
+            return -1, {"status": "error", "reason": guard.R_ERROR,
+                        "twin_found": False, "detail": repr(e)}
         dt_ms = (time.perf_counter() - t0) * 1e3
+        self._apply_monitor(self.monitor.step_finished())
+
+        self.stats.retries += retries
+        self.stats.twin_hits += found
+        self.stats.fallbacks += not found
+        self.stats.overflows += overflowed
         self.state = new_state
         self.stats.onboarded += 1
         self.stats.onboard_ms.append(dt_ms)
+
+        if not self._check_and_snapshot():
+            return -1, {"status": "rolled_back", "twin_found": False,
+                        "ms": dt_ms}
         uid = int(self.state.n_active) - 1
-        return uid, {"twin_found": found, "ms": dt_ms}
+        return uid, {"status": "ok", "twin_found": found, "ms": dt_ms,
+                     "level": LEVEL_NAMES[self.level]}
 
     # -- queries ------------------------------------------------------------
 
     def recommend(self, user: int, n: int = 10,
                   k_neighbors: int = 20) -> list[tuple[int, float]]:
+        if guard.validate_user_id(user, int(self.state.n_active)):
+            self._reject("recommend", guard.R_USER_ID, user)
+            return []
         scores, items = self._recommend(self.state, jnp.int32(user),
                                         k_neighbors=k_neighbors, n_rec=n)
         return [(int(i), float(s)) for s, i in zip(scores, items)]
 
     def predict(self, user: int, item: int, k: int = 20) -> float:
+        if guard.validate_user_id(user, int(self.state.n_active)):
+            self._reject("predict", guard.R_USER_ID, user)
+            return 0.0
+        if guard.validate_item_id(item, self.state.n_items):
+            self._reject("predict", guard.R_ITEM_ID, item)
+            return 0.0
         return float(self._predict(self.state, jnp.int32(user),
                                    jnp.int32(item), k=k))
 
     # -- maintenance --------------------------------------------------------
 
-    def add_rating(self, user: int, item: int, rating: float) -> None:
+    def add_rating(self, user: int, item: int, rating: float) -> bool:
+        """Returns True iff the update was applied (False = quarantined)."""
+        if guard.validate_user_id(user, int(self.state.n_active)):
+            self._reject("add_rating", guard.R_USER_ID, user)
+            return False
+        if guard.validate_item_id(item, self.state.n_items):
+            self._reject("add_rating", guard.R_ITEM_ID, item)
+            return False
+        reason = guard.validate_rating_value(rating, self.rating_range)
+        if reason is not None:
+            self._reject("add_rating", reason, rating)
+            return False
         if self._cache is None:
-            self._cache = jax.jit(upd_lib.init_cache)(self.state.ratings)
-            self._add = jax.jit(upd_lib.add_rating)
+            self._cache = self._init_cache(self.state.ratings)
         self.state, self._cache = self._add(
             self.state, self._cache, jnp.int32(user), jnp.int32(item),
             jnp.float32(rating))
+        return True

@@ -1,0 +1,7 @@
+"""Deterministic fault-injection tooling for resilience tests."""
+from repro.testing.faults import (FakeClock, Flaky, MalformedRequests,
+                                 capacity_flood, inject_latency,
+                                 poison_state)
+
+__all__ = ["FakeClock", "Flaky", "MalformedRequests", "capacity_flood",
+           "inject_latency", "poison_state"]

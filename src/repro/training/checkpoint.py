@@ -36,10 +36,14 @@ def save(ckpt_dir: str, step: int, tree: Any,
          extra: dict | None = None, keep_last: int = 3) -> str:
     """Atomically persist ``tree`` (any pytree of arrays) at ``step``."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    # Sweep stale tmp dirs from crashed saves (any step, not just ours):
+    # discovery already ignores them (the step_<n> pattern excludes .tmp),
+    # so they are dead weight that would otherwise accumulate forever.
+    for name in os.listdir(ckpt_dir):
+        if re.fullmatch(r"step_\d+\.tmp", name):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
     os.makedirs(tmp)
 
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]

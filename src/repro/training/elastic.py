@@ -10,10 +10,13 @@ rules are written against axis roles so no model code changes.
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable
+
+log = logging.getLogger(__name__)
 
 
 class Action(Enum):
@@ -37,8 +40,15 @@ class StragglerMonitor:
         self._last_start = self.clock()
 
     def step_finished(self) -> Action:
-        assert self._last_start is not None
+        if self._last_start is None:
+            # A finish with no matching start (caller skipped step_started,
+            # or a double-finish) carries no timing signal; dropping the
+            # sample beats crashing the step loop it is meant to protect.
+            log.warning("step_finished() without step_started(); "
+                        "sample dropped")
+            return Action.CONTINUE
         dt = self.clock() - self._last_start
+        self._last_start = None
         self._times.append(dt)
         if len(self._times) > self.window:
             self._times.pop(0)

@@ -1,0 +1,396 @@
+"""Fault-injection suite: the CF serving path under hostile conditions.
+
+Contract under test (ISSUE 7): ``CFServer`` never raises to the caller —
+capacity overflow rotates the arena, malformed requests are quarantined,
+latency spikes walk the degradation ladder, transient executor faults
+retry, and a poisoned arena (bit-flips / simulated shard loss) is detected
+and rolled back to the last good snapshot.  All faults come from the
+deterministic harness in ``repro/testing/faults.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import rotate_arena, unsorted_rows
+from repro.core.similarity import cosine_matrix
+from repro.core.types import SENTINEL_GATE
+from repro.kernels.verify_rows.ops import arena_healthy, rows_sorted_finite
+from repro.kernels.verify_rows.ref import rows_sorted_finite_ref
+from repro.serving import CFServer, ServerStats
+from repro.serving.guard import RetryPolicy
+from repro.testing import (FakeClock, Flaky, MalformedRequests,
+                           capacity_flood, inject_latency, poison_state)
+from repro.training import checkpoint
+from repro.training.elastic import Action, StragglerMonitor
+from tests.conftest import make_ratings
+
+pytestmark = pytest.mark.faults
+
+
+def _unsorted_active(state, n_act):
+    """(n_act, n_act) unsorted similarity block recovered from the lists."""
+    rows = unsorted_rows(state.sim_vals, state.sim_idx,
+                         jnp.arange(n_act, dtype=jnp.int32))
+    return np.asarray(rows)[:, :n_act]
+
+
+# ---------------------------------------------------------------------------
+# Guard + quarantine
+# ---------------------------------------------------------------------------
+
+class TestGuardQuarantine:
+    def test_malformed_onboards_never_raise(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, c_probes=4)
+        mal = MalformedRequests(16, seed=1)
+        for name, bad in mal.everything():
+            uid, info = srv.onboard_user(bad)
+            assert uid == -1 and info["status"] == "rejected", name
+        assert srv.stats.rejected == 7
+        assert srv.quarantine.total == 7
+        # one rejection per failure mode, keyed by stable reason strings
+        assert set(srv.quarantine.counts) == {
+            "non_finite", "shape", "dtype", "range", "empty"}
+        # nothing malformed reached the arena: still healthy, still serving
+        assert bool(arena_healthy(srv.state.sim_vals, srv.state.ratings,
+                                  srv.state.norms, srv.state.n_active))
+        uid, info = srv.onboard_user(R[3])
+        assert uid == 40 and info["status"] == "ok"
+
+    def test_query_and_update_guards(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        srv = CFServer(R, capacity_extra=4)
+        assert srv.recommend(-1) == []
+        assert srv.recommend(10_000) == []
+        assert srv.predict(5, 10_000) == 0.0
+        assert not srv.add_rating(5, 3, float("nan"))
+        assert not srv.add_rating(5, 3, 99.0)
+        assert not srv.add_rating("x", 3, 4.0)
+        assert srv.stats.rejected == 6
+        assert srv.add_rating(5, 3, 4.0)          # valid still goes through
+        assert float(srv.state.ratings[5, 3]) == 4.0
+
+    def test_quarantine_ring_is_bounded(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=2, quarantine_capacity=5)
+        for _ in range(20):
+            srv.onboard_user(np.full(10, np.nan, np.float32))
+        assert len(srv.quarantine.records) == 5
+        assert srv.quarantine.total == 20
+
+
+# ---------------------------------------------------------------------------
+# Arena rotation
+# ---------------------------------------------------------------------------
+
+class TestArenaRotation:
+    def test_overflow_rotates_instead_of_raising(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=1)
+        srv.onboard_user(R[0])                    # fills the only slot
+        uid, info = srv.onboard_user(R[1])        # used to RuntimeError
+        assert uid == 21 and info["status"] == "ok"
+        assert srv.stats.rotations == 1
+        assert srv.n_base == 21 and srv.state.capacity == 22
+
+    def test_flood_past_capacity(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        srv = CFServer(R, capacity_extra=4, c_probes=4)
+        results = capacity_flood(srv, R, 14, seed=3)
+        uids = [u for u, info in results]
+        assert all(info["status"] == "ok" for _, info in results)
+        assert uids == list(range(30, 44))         # monotonic, no gaps
+        assert srv.stats.rotations == 3            # 4-slot arena, 14 users
+        assert int(srv.state.n_active) == 44
+        recs = srv.recommend(43, n=5)
+        assert len(recs) == 5
+
+    def test_rotation_bit_exact_data_movement(self, rng):
+        """Rotated base lists must be a pure rearrangement: bitwise equal
+        to a numpy re-sort of (gated base entries + recovered buffer sims)
+        — no similarity arithmetic happens during rotation."""
+        R = make_ratings(rng, n=25, m=12)
+        srv = CFServer(R, capacity_extra=4, c_probes=4)
+        for i in (3, 7, 3, 11):                    # mix of twins + fresh
+            srv.onboard_user(R[i])
+        st = srv.state
+        n_base, n_act, extra = 25, 29, 4
+        U = np.asarray(unsorted_rows(
+            st.sim_vals, st.sim_idx,
+            jnp.arange(n_base, n_act, dtype=jnp.int32)))
+        rot = rotate_arena(st, n_base=n_base, extra=extra)
+        assert rot.capacity == n_act + extra
+        for x in range(n_base):
+            vals = np.asarray(st.sim_vals[x])
+            idx = np.asarray(st.sim_idx[x])
+            keep = idx < n_base                    # pre-rotation real entries
+            ref = np.sort(np.concatenate(
+                [vals[keep], U[:, x].astype(vals.dtype)]))
+            row = np.asarray(rot.sim_vals[x])
+            np.testing.assert_array_equal(row[-ref.shape[0]:], ref)
+            ridx = np.asarray(rot.sim_idx[x])
+            real = row > SENTINEL_GATE
+            assert set(ridx[real]) == set(range(n_act))
+
+    def test_rotated_arena_matches_fresh_traditional_build(self, rng):
+        R = make_ratings(rng, n=25, m=12)
+        srv = CFServer(R, capacity_extra=5, c_probes=4)
+        fresh = make_ratings(np.random.default_rng(7), n=3, m=12)
+        for r in (R[3], fresh[0], R[3], fresh[1], fresh[2]):
+            srv.onboard_user(r)
+        srv.onboard_user(R[8])                     # triggers rotation
+        assert srv.stats.rotations == 1
+        n_act = int(srv.state.n_active)
+        S_ref = np.asarray(cosine_matrix(srv.state.ratings[:n_act]))
+        # The compacted region (everything rotated into the base) is
+        # all-pairs complete and matches a fresh traditional build ...
+        nb = srv.n_base
+        S_rot = _unsorted_active(srv.state, n_act)
+        np.testing.assert_allclose(S_rot[:nb, :nb], S_ref[:nb, :nb],
+                                   atol=1e-5)
+        np.testing.assert_allclose(S_rot[nb:, :nb], S_ref[nb:, :nb],
+                                   atol=1e-5)      # new rows vs base
+        # ... and the post-rotation onboard's deferred symmetric entries
+        # land on the next compaction: rotating once more yields the full
+        # fresh matrix.
+        full = rotate_arena(srv.state, n_base=nb, extra=0)
+        S_full = _unsorted_active(full, n_act)
+        np.testing.assert_allclose(S_full, S_ref, atol=1e-5)
+        # rows stay ascending and healthy after rotation
+        assert bool(arena_healthy(srv.state.sim_vals, srv.state.ratings,
+                                  srv.state.norms, srv.state.n_active))
+
+    def test_rotation_gates_refreshed_rows(self, rng):
+        """A base row re-sorted by add_rating already contains write-region
+        entries; rotation must not duplicate them."""
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=2, c_probes=4)
+        srv.onboard_user(R[2])
+        srv.add_rating(5, 3, 4.0)                  # row 5 now sees user 20
+        srv.onboard_user(R[6])                     # fills the arena
+        srv.onboard_user(R[9])                     # rotates, then onboards
+        assert srv.stats.rotations == 1
+        idx = np.asarray(srv.state.sim_idx)
+        vals = np.asarray(srv.state.sim_vals)
+        n_act = int(srv.state.n_active)
+        for x in range(n_act):
+            real = idx[x][vals[x] > SENTINEL_GATE]
+            assert len(real) == len(set(real)), f"duplicate ids in row {x}"
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder (latency spikes, virtual time)
+# ---------------------------------------------------------------------------
+
+class TestDegradationLadder:
+    def _server(self, R, clock, **kw):
+        mon = StragglerMonitor(window=20, straggler_ratio=2.0,
+                               hang_timeout_s=1000.0,
+                               consecutive_to_shrink=2, clock=clock)
+        return CFServer(R, capacity_extra=64, c_probes=4, monitor=mon,
+                        snapshot_every=10_000, check_every=10_000, **kw)
+
+    def test_spikes_step_down_ladder_then_recover(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        clock = FakeClock()
+        srv = self._server(R, clock, recover_after=5, shed_cooldown_s=10.0)
+        inject_latency(srv, clock, [0.1] * 12 + [1.0] * 4 + [0.1] * 30)
+        for i in range(16):
+            _, info = srv.onboard_user(R[i % 40])
+            assert info["status"] == "ok"
+        # two straggler verdicts: twinsearch -> traditional -> shed
+        assert srv.stats.degradations == 2
+        assert srv.level == 2
+
+        # shed: backpressure, no work, no raise
+        uid, info = srv.onboard_user(R[0])
+        assert uid == -1 and info["status"] == "shed"
+        assert info["retry_after_s"] > 0
+        assert srv.stats.shed == 1
+
+        # cooldown expiry probes traditional again, healthy streak recovers
+        clock.advance(11.0)
+        _, info = srv.onboard_user(R[0])
+        assert info["status"] == "ok" and srv.level == 1
+        for i in range(6):
+            srv.onboard_user(R[i])
+        assert srv.level == 0
+        assert srv.stats.recoveries == 2
+
+    def test_hang_sheds_immediately(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        clock = FakeClock()
+        mon = StragglerMonitor(window=20, straggler_ratio=2.0,
+                               hang_timeout_s=5.0,
+                               consecutive_to_shrink=2, clock=clock)
+        srv = CFServer(R, capacity_extra=16, c_probes=4, monitor=mon,
+                       snapshot_every=10_000, check_every=10_000)
+        inject_latency(srv, clock, [0.1] * 10 + [60.0])
+        for i in range(10):
+            srv.onboard_user(R[i])
+        assert srv.level == 0
+        _, info = srv.onboard_user(R[10])          # hang-scale latency
+        assert info["status"] == "ok"              # the call did finish...
+        assert srv.level == 2                      # ...but ABORT -> shed
+
+
+# ---------------------------------------------------------------------------
+# Retry / transient executor faults
+# ---------------------------------------------------------------------------
+
+class TestRetry:
+    def test_transient_fault_retries_to_success(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        srv = CFServer(R, capacity_extra=4,
+                       retry=RetryPolicy(max_attempts=4, base_delay_s=1e-4,
+                                         deadline_s=10.0,
+                                         sleep=lambda s: None))
+        srv._onboard = Flaky(srv._onboard, fail_times=2)
+        uid, info = srv.onboard_user(R[0])
+        assert uid == 30 and info["status"] == "ok"
+        assert srv.stats.retries == 2
+
+    def test_permanent_fault_is_quarantined_not_raised(self, rng):
+        R = make_ratings(rng, n=30, m=12)
+        srv = CFServer(R, capacity_extra=4,
+                       retry=RetryPolicy(max_attempts=3, base_delay_s=1e-4,
+                                         deadline_s=10.0,
+                                         sleep=lambda s: None))
+        srv._onboard = Flaky(srv._onboard, fail_times=99)
+        uid, info = srv.onboard_user(R[0])
+        assert uid == -1 and info["status"] == "error"
+        assert srv.stats.errors == 1
+        assert srv.quarantine.counts["error"] == 1
+        # state untouched by the failed attempts (functional updates)
+        assert int(srv.state.n_active) == 30
+        srv._build_jits()                          # drop the fault wrapper
+        uid, info = srv.onboard_user(R[0])
+        assert uid == 30 and info["status"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / rollback (state poisoning, simulated shard loss)
+# ---------------------------------------------------------------------------
+
+class TestSnapshotRollback:
+    def test_poisoned_lists_roll_back(self, rng, tmp_path):
+        R = make_ratings(rng, n=30, m=12)
+        srv = CFServer(R, capacity_extra=8, snapshot_every=3, check_every=1,
+                       snapshot_dir=str(tmp_path))
+        for i in range(4):
+            srv.onboard_user(R[i])
+        good_n = int(srv.state.n_active)
+        assert checkpoint.all_steps(str(tmp_path))  # disk snapshots landed
+
+        poison_state(srv, rows=[2, 17])            # bit-flip corruption
+        uid, info = srv.onboard_user(R[5])
+        assert uid == -1 and info["status"] == "rolled_back"
+        assert srv.stats.rollbacks == 1
+        assert int(srv.state.n_active) <= good_n
+        assert bool(arena_healthy(srv.state.sim_vals, srv.state.ratings,
+                                  srv.state.norms, srv.state.n_active))
+        uid, info = srv.onboard_user(R[5])         # back in business
+        assert info["status"] == "ok"
+        assert len(srv.recommend(int(srv.state.n_active) - 1, n=3)) == 3
+
+    def test_simulated_shard_loss_rolls_back(self, rng):
+        R = make_ratings(rng, n=32, m=12)
+        srv = CFServer(R, capacity_extra=8, snapshot_every=2, check_every=1)
+        for i in range(3):
+            srv.onboard_user(R[i])
+        # shard 2 of 4 dies; its row-shard of the ratings arena is garbage
+        lost = poison_state(srv, shard=2, n_shards=4, field="ratings")
+        assert lost.shape[0] == 10                 # 40-row arena / 4
+        uid, info = srv.onboard_user(R[7])
+        assert uid == -1 and info["status"] == "rolled_back"
+        assert srv.stats.rollbacks == 1
+        uid, info = srv.onboard_user(R[7])
+        assert info["status"] == "ok"
+
+    def test_rollback_across_rotation_restores_geometry(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=2, snapshot_every=10_000,
+                       check_every=1)
+        cap0, nb0 = srv.state.capacity, srv.n_base
+        for i in range(5):                         # forces rotations
+            srv.onboard_user(R[i])
+        assert srv.stats.rotations >= 1
+        assert srv.state.capacity > cap0
+        poison_state(srv, rows=[1])
+        _, info = srv.onboard_user(R[6])
+        assert info["status"] == "rolled_back"
+        # only the construction snapshot existed: geometry rolled back too
+        assert srv.state.capacity == cap0 and srv.n_base == nb0
+        _, info = srv.onboard_user(R[6])
+        assert info["status"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Invariant-check op (verify_rows family)
+# ---------------------------------------------------------------------------
+
+class TestHealthOp:
+    def test_rows_sorted_finite_matches_ref(self, rng):
+        vals = np.sort(rng.normal(size=(8, 16)).astype(np.float32), axis=1)
+        vals[2, 5] = np.nan                        # live + non-finite
+        vals[4, 3], vals[4, 4] = vals[4, 4], vals[4, 3]   # live + unsorted
+        vals[6, 0] = np.inf                        # unsorted AND non-finite
+        live = np.arange(8) < 7                    # row 7 is dead
+        vals[7, :] = np.nan                        # dead rows never flag
+        got = np.asarray(rows_sorted_finite(jnp.asarray(vals), jnp.int32(7)))
+        ref = np.asarray(rows_sorted_finite_ref(jnp.asarray(vals),
+                                                jnp.asarray(live)))
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(
+            got, [True, True, False, True, False, True, False, True])
+
+    def test_arena_healthy_gates(self, rng):
+        R = make_ratings(rng, n=16, m=8)
+        srv = CFServer(R, capacity_extra=2)
+        st = srv.state
+        ok = lambda s: bool(arena_healthy(s.sim_vals, s.ratings, s.norms,
+                                          s.n_active))
+        assert ok(st)
+        assert not ok(st._replace(
+            norms=st.norms.at[3].set(jnp.float32(jnp.nan))))
+        assert not ok(st._replace(n_active=jnp.int32(99)))
+        bad = st.sim_vals.at[0, 0].set(jnp.float32(5.0))   # > all: unsorted
+        assert not ok(st._replace(sim_vals=bad))
+
+
+# ---------------------------------------------------------------------------
+# Satellites
+# ---------------------------------------------------------------------------
+
+class TestSatellites:
+    def test_onboard_ms_is_bounded_ring(self):
+        stats = ServerStats(latency_window=8)
+        for i in range(100):
+            stats.onboard_ms.append(float(i))
+        assert len(stats.onboard_ms) == 8
+        s = stats.summary()
+        # percentiles over the trailing window only (92..99)
+        assert s["onboard_p50_ms"] == 96.0
+        assert s["onboard_p99_ms"] == 99.0
+
+    def test_straggler_finish_without_start(self):
+        mon = StragglerMonitor()
+        assert mon.step_finished() is Action.CONTINUE
+        assert mon.stats() == {}                   # no sample recorded
+        mon.step_started()
+        assert mon.step_finished() is Action.CONTINUE
+        assert mon.step_finished() is Action.CONTINUE   # double-finish too
+        assert mon.stats()["n"] == 1
+
+    def test_add_rating_jit_hoisted(self, rng):
+        R = make_ratings(rng, n=12, m=8)
+        srv = CFServer(R, capacity_extra=2)
+        # jits exist before any call — a first-call failure can't leave the
+        # server half-initialised
+        for attr in ("_add", "_init_cache", "_onboard", "_onboard_trad",
+                     "_recommend", "_predict"):
+            assert hasattr(srv, attr), attr
+        assert srv._cache is None                  # cache itself stays lazy

@@ -43,13 +43,14 @@ class TestCFServer:
         srv.add_rating(3, 7, 5.0)
         assert float(srv.state.ratings[3, 7]) == 5.0
 
-    def test_capacity_guard(self, rng):
+    def test_capacity_rotates_instead_of_raising(self, rng):
         R = make_ratings(rng, n=20, m=10)
         srv = CFServer(R, capacity_extra=1)
-        srv.onboard_user(R[0])
-        import pytest
-        with pytest.raises(RuntimeError):
-            srv.onboard_user(R[1])
+        srv.onboard_user(R[0])                  # arena now full
+        uid, info = srv.onboard_user(R[1])      # rotation, not RuntimeError
+        assert uid == 21 and info["status"] == "ok"
+        assert srv.stats.rotations == 1
+        assert srv.n_base == 21 and srv.state.capacity == 22
 
 
 class TestDedup:

@@ -125,6 +125,26 @@ def test_checkpoint_roundtrip_and_prune(tmp_path):
     assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
 
 
+def test_checkpoint_crash_mid_save(tmp_path):
+    """A crash between tmp-dir write and the atomic rename leaves a
+    ``step_*.tmp`` dir: discovery must ignore it, restore must serve the
+    previous good step, and the next save must sweep it."""
+    tree = {"a": jnp.arange(10.0)}
+    checkpoint.save(str(tmp_path), 5, tree)
+    # simulate the crash: a half-written tmp dir for a newer step
+    stale = tmp_path / "step_0000000006.tmp"
+    stale.mkdir()
+    (stale / "a.npy").write_bytes(b"garbage")
+    assert checkpoint.all_steps(str(tmp_path)) == [5]
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    restored, step, _ = checkpoint.restore(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(10.0))
+    checkpoint.save(str(tmp_path), 7, tree)     # sweeps the stale tmp
+    assert not stale.exists()
+    assert checkpoint.all_steps(str(tmp_path)) == [5, 7]
+
+
 def test_compression_error_feedback():
     params = {"w": jnp.zeros(1000)}
     ef = init_ef(params)

@@ -1,0 +1,124 @@
+"""Durability-layer throughput: what crash recovery and replica loss cost.
+
+Four questions, answered in wall time:
+
+  * **wal**: append cost per mutating op, with and without fsync — the
+    per-request durability tax;
+  * **replay**: WAL replay time per logged onboard on restart — how long
+    a crash actually costs, vs the traditional rebuild it replaces;
+  * **rereplicate**: background re-replication throughput (rows/s of pure
+    host-side copy) — how fast r-way redundancy comes back after a node
+    loss;
+  * **repair**: healing poisoned primary rows from replicas (failover
+    read + scatter back) — the cost of NOT rolling back.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.distributed.replication import ReplicatedArena, ReplicationConfig
+from repro.serving import CFServer
+from repro.testing import poison_state
+
+
+def _ratings(rng, n, m, density=0.3):
+    R = (rng.integers(1, 6, (n, m)) * (rng.random((n, m)) < density)
+         ).astype(np.float32)
+    R[R.sum(axis=1) == 0, 0] = 3.0
+    return R
+
+
+def _median(fn, repeats=5):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def main(csv: CSV) -> None:
+    rng = np.random.default_rng(0)
+    n, m, extra = 1000, 100, 64
+    n_ops = 32
+    R = _ratings(rng, n, m)
+
+    # -- WAL append cost, fsync on/off -----------------------------------
+    for fsync in (True, False):
+        d = tempfile.mkdtemp(prefix="walbench-")
+        try:
+            srv = CFServer(R, capacity_extra=extra, c_probes=8,
+                           wal_dir=d, wal_fsync=fsync,
+                           snapshot_every=10**9, check_every=10**9)
+            row = R[rng.integers(0, n)]
+            srv.onboard_user(row)                     # compile
+            t = _median(lambda: srv.onboard_user(row), repeats=10)
+            csv.add(f"wal/onboard_fsync_{int(fsync)}", t,
+                    f"m={m} incl. onboard")
+            t = _median(lambda: srv.add_rating(5, 3, 4.0), repeats=10)
+            csv.add(f"wal/add_rating_fsync_{int(fsync)}", t, "")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    # -- replay throughput on recovery -----------------------------------
+    wal_d = tempfile.mkdtemp(prefix="walbench-")
+    snap_d = tempfile.mkdtemp(prefix="snapbench-")
+    try:
+        srv = CFServer(R, capacity_extra=extra, c_probes=8, wal_dir=wal_d,
+                       snapshot_dir=snap_d, snapshot_every=10**9,
+                       check_every=10**9)
+        for _ in range(n_ops):
+            srv.onboard_user(R[rng.integers(0, n)])
+        t0 = time.perf_counter()
+        rec = CFServer.recover(R, capacity_extra=extra, c_probes=8,
+                               wal_dir=wal_d, snapshot_dir=snap_d,
+                               snapshot_every=10**9, check_every=10**9)
+        dt = time.perf_counter() - t0
+        assert rec.stats.wal_replayed == n_ops
+        csv.add("replay/per_onboard", dt / n_ops,
+                f"{n_ops} ops, total {dt * 1e3:.0f}ms incl. restore")
+    finally:
+        shutil.rmtree(wal_d, ignore_errors=True)
+        shutil.rmtree(snap_d, ignore_errors=True)
+
+    # -- re-replication throughput (pure data movement) ------------------
+    srv = CFServer(R, capacity_extra=extra, c_probes=8,
+                   snapshot_every=10**9, check_every=10**9,
+                   replication=ReplicationConfig(n_shards=8, r=2))
+    reps: ReplicatedArena = srv.replicas
+    rows_per_kill = 2 * ((n + extra) // 8)            # 2 replicas per node
+
+    def rebuild():
+        reps.kill_node(3)
+        return reps.step_rebuild()
+
+    t = _median(rebuild, repeats=5)
+    csv.add("rereplicate/full_node", t,
+            f"{rows_per_kill} rows, {rows_per_kill / max(t, 1e-9):,.0f} "
+            f"rows/s")
+
+    # -- primary repair from replicas (failover read path) ---------------
+    bad = None
+
+    def repair():
+        nonlocal bad
+        bad = poison_state(srv, shard=5, n_shards=8)
+        fixed, rows = reps.repair(srv.state)
+        assert fixed is not None and rows.size == bad.size
+        srv.state = fixed
+
+    t = _median(repair, repeats=5)
+    csv.add("repair/shard_rows", t,
+            f"{len(bad)} rows healed, zero similarity math")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    main(c)

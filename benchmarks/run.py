@@ -8,6 +8,8 @@
                      inserts (bit-exactness asserted), k in {1,5,10,20,30}
   resilience_bench   fault-tolerance overhead: request-guard tax, arena
                      rotation vs fresh rebuild, health-check + snapshot
+  recovery_bench     durability throughput: WAL append/replay cost,
+                     re-replication rows/s, replica repair
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full-scale
 cells come from ``python -m repro.launch.dryrun --all`` +
@@ -24,12 +26,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["twinsearch", "setsize", "scaling",
                                        "kernel", "maintenance",
-                                       "resilience"], default=None)
+                                       "resilience", "recovery"],
+                    default=None)
     args, _ = ap.parse_known_args()
 
     csv = CSV()
     csv.header()
-    from benchmarks import (kernel_bench, maintenance_bench,
+    from benchmarks import (kernel_bench, maintenance_bench, recovery_bench,
                             resilience_bench, scaling_bench, setsize_bench,
                             twinsearch_bench)
     todo = {
@@ -38,6 +41,7 @@ def main() -> None:
         "kernel": kernel_bench.main,
         "maintenance": maintenance_bench.main,
         "resilience": resilience_bench.main,
+        "recovery": recovery_bench.main,
         "twinsearch": twinsearch_bench.main,
     }
     for name, fn in todo.items():

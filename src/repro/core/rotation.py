@@ -34,6 +34,8 @@ gates those out before the merge so no row ends up with duplicates.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -73,13 +75,22 @@ def _fit_width(vals: jax.Array, idx: jax.Array,
 
 
 def rotate_arena(state: CFState, *, n_base: int, extra: int,
+                 headroom: float = 1.0,
                  use_pallas: bool | None = None) -> CFState:
     """Compact the write region [n_base, n_active) into a new base arena of
     capacity ``n_active + extra``.  Rotation is rare (once per k_cap
     onboards) and runs un-jitted at the top level; the merge underneath is
-    the jitted ``merge_insert`` op."""
+    the jitted ``merge_insert`` op.
+
+    ``headroom`` is the rotation *hysteresis* knob: the fresh write region
+    is at least ``headroom`` times the burst just absorbed, so a sustained
+    flood that fills ``extra`` slots immediately gets a proportionally
+    larger buffer next time instead of re-triggering a synchronous rotation
+    after the same number of onboards.  ``headroom=1.0`` (the default)
+    reproduces the fixed-size behaviour."""
     n_act = int(state.n_active)
     k = n_act - n_base
+    extra = max(int(extra), int(math.ceil(float(headroom) * k)))
     n_new = n_act + extra
     m = state.n_items
 

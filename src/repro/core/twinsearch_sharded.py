@@ -205,3 +205,46 @@ def onboard_batch_sharded(state: CFState, R_new: jax.Array,
     if maintain:
         return vals, idx, stats, out[3]
     return vals, idx, stats
+
+
+def onboard_batch_resilient(state: CFState, R_new: jax.Array,
+                            probe_idx: jax.Array, *, s_max: int,
+                            axes: tuple[str, ...], mesh,
+                            replicas=None, retry=None, tol: float = 1e-6,
+                            unroll: bool = False, maintain: bool = False):
+    """``onboard_batch_sharded`` behind the serving resilience layer.
+
+    Pre-flight, the replicated arena (``distributed/replication.py``)
+    sweeps replica health and heals any poisoned primary rows from
+    surviving replicas — pure data movement, so a dead shard's garbage
+    never feeds the scan.  The shard_map launch itself runs under the
+    serving ``RetryPolicy`` (transient executor faults retry with
+    backoff).  Returns ``(state, result)``: ``state`` is the (possibly
+    healed) arena the scan actually ran on.
+
+    Raises ``RuntimeError`` if a poisoned row has no surviving replica —
+    at that point only a snapshot rollback (the serving layer's job) can
+    help, and running the scan over garbage would waste the collective
+    traffic.
+    """
+    from repro.serving import guard as _guard       # no import cycle: lazy
+
+    if replicas is not None:
+        replicas.sweep()
+        fixed, rows = replicas.repair(state)
+        if fixed is None:
+            raise RuntimeError(
+                f"{rows.size} arena rows unrecoverable (all replicas of "
+                f"their shard down); roll back to a snapshot")
+        state = fixed
+
+    def run():
+        out = onboard_batch_sharded(state, R_new, probe_idx, s_max=s_max,
+                                    axes=axes, mesh=mesh, tol=tol,
+                                    unroll=unroll, maintain=maintain)
+        jax.block_until_ready(out)
+        return out
+
+    result, _retries = _guard.call_with_retry(
+        run, retry or _guard.RetryPolicy())
+    return state, result

@@ -1,7 +1,10 @@
+from repro.distributed.replication import (ReplicaState, ReplicatedArena,
+                                           ReplicationConfig)
 from repro.distributed.sharding import (MeshAxes, cf_shardings,
                                         gnn_shardings, lm_shardings,
                                         mesh_axes, named, recsys_shardings,
                                         zero_extend)
 
 __all__ = ["MeshAxes", "cf_shardings", "gnn_shardings", "lm_shardings",
-           "mesh_axes", "named", "recsys_shardings", "zero_extend"]
+           "mesh_axes", "named", "recsys_shardings", "zero_extend",
+           "ReplicaState", "ReplicatedArena", "ReplicationConfig"]

@@ -1,0 +1,336 @@
+"""r-way replication over the row-sharded CF arena.
+
+The serving arena is row-sharded (``shard_row_slice`` — the same even
+row split every CF arena spec uses, ``P(ax.all, None)``).  At fleet
+scale a shard's host dying is routine; without replication the only
+recovery PR 2 offered was rollback to the last snapshot, which *loses*
+every onboard since it.  Landmark-style rebuilds (Lima et al.,
+arXiv:1705.07051) trade accuracy for speed; replication instead keeps
+``r`` byte-identical copies of every row slice, so recovery is **exact
+and similarity-free**:
+
+  * **placement** — replica j of shard s lives on node ``(s + j) % n``
+    (chained declustering): any single node loss leaves every shard with
+    at least one survivor for all ``r >= 2``;
+  * **health** — per-replica state (HEALTHY / REBUILDING / DEAD) driven
+    by the same invariant family as the serving layer's poison detector
+    (``verify_rows``: live similarity lists finite + ascending, finite
+    ratings/norms), swept per replica slice;
+  * **failover reads / repair** — a poisoned primary row is re-read from
+    the first healthy replica of its shard (``repair``): pure data
+    movement, bit-exact, zero similarity recompute;
+  * **re-replication** — a lost replica is rebuilt by copying rows from
+    a surviving replica of the same shard (never from the primary, which
+    may itself be the casualty), incrementally under a per-call row
+    budget so it runs as background work between requests.
+
+Everything here is host-side ``np`` data movement over slices defined by
+``shard_row_slice``; no jitted kernel is ever invoked — the replica-kill
+tests assert that by making every similarity kernel raise.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass
+from enum import Enum
+
+import numpy as np
+
+from repro.distributed.sharding import shard_row_slice
+
+log = logging.getLogger(__name__)
+
+# The arena fields a replica mirrors, in checkpoint order.
+FIELDS = ("ratings", "norms", "sim_vals", "sim_idx")
+
+
+class ReplicaState(Enum):
+    HEALTHY = "healthy"
+    REBUILDING = "rebuilding"
+    DEAD = "dead"
+
+
+@dataclass(frozen=True)
+class ReplicationConfig:
+    n_shards: int = 4
+    r: int = 2                     # replica factor (copies per shard)
+    rebuild_rows: int = 0          # rows copied per step_rebuild call; 0 = all
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if not 1 <= self.r <= self.n_shards:
+            raise ValueError(
+                f"replica factor r={self.r} outside [1, {self.n_shards}]")
+
+    def owners(self, shard: int) -> tuple[int, ...]:
+        """Nodes holding shard ``shard``, primary first (chained
+        declustering)."""
+        return tuple((shard + j) % self.n_shards for j in range(self.r))
+
+
+class _Replica:
+    """One (node, shard) copy: per-field row-slice arrays + health."""
+
+    __slots__ = ("node", "shard", "state", "data", "progress")
+
+    def __init__(self, node: int, shard: int):
+        self.node = node
+        self.shard = shard
+        self.state = ReplicaState.HEALTHY
+        self.data: dict[str, np.ndarray] = {}
+        self.progress = 0              # rows copied so far while REBUILDING
+
+
+def _row_ok(ratings: np.ndarray, norms: np.ndarray,
+            sim_vals: np.ndarray) -> np.ndarray:
+    """Per-row arena invariant (the ``verify_rows`` family contract):
+    finite ratings and norms, finite ascending similarity lists."""
+    fin_r = np.isfinite(ratings).all(axis=1)
+    fin_n = np.isfinite(norms) & (norms >= 0)
+    fin_s = np.isfinite(sim_vals).all(axis=1)
+    asc = (np.diff(sim_vals, axis=1) >= 0).all(axis=1)
+    return fin_r & fin_n & fin_s & asc
+
+
+class ReplicatedArena:
+    """r-way replicated mirror of a ``CFState``'s row-sharded fields.
+
+    The primary arena stays the single jit-visible ``CFState``; this
+    class owns the replica copies, their health, and the recovery data
+    paths.  The serving layer keeps replicas in sync by calling
+    ``apply_rows`` after each committed mutation and ``reset`` after a
+    geometry change (rotation / rollback / restore).
+    """
+
+    def __init__(self, state, cfg: ReplicationConfig):
+        self.cfg = cfg
+        self.rebuilt_rows = 0          # re-replication row copies (lifetime)
+        self.repaired_rows = 0         # primary rows healed from replicas
+        self.dead_marks = 0            # replicas lost (kill + sweep)
+        self._replicas: dict[tuple[int, int], _Replica] = {}
+        for s in range(cfg.n_shards):
+            for node in cfg.owners(s):
+                self._replicas[(node, s)] = _Replica(node, s)
+        self.reset(state)
+
+    # -- geometry -----------------------------------------------------------
+
+    def reset(self, state) -> None:
+        """(Re)build every live replica from ``state`` — full
+        re-replication after construction or an arena geometry change."""
+        self.n_rows = int(state.capacity)
+        if self.n_rows < self.cfg.n_shards:
+            raise ValueError(
+                f"arena of {self.n_rows} rows cannot spread over "
+                f"{self.cfg.n_shards} shards")
+        self.n_active = int(state.n_active)
+        self._slices = [shard_row_slice(self.n_rows, self.cfg.n_shards, s)
+                        for s in range(self.cfg.n_shards)]
+        host = {f: np.asarray(getattr(state, f)) for f in FIELDS}
+        for rep in self._replicas.values():
+            if rep.state is ReplicaState.DEAD:
+                continue
+            sl = self._slices[rep.shard]
+            rep.data = {f: host[f][sl].copy() for f in FIELDS}
+            rep.state = ReplicaState.HEALTHY
+            rep.progress = 0
+
+    def shard_of(self, row: int) -> int:
+        per = max(1, self.n_rows // self.cfg.n_shards)
+        return min(row // per, self.cfg.n_shards - 1)
+
+    def _live_for_write(self, rep: _Replica, local_row: int) -> bool:
+        if rep.state is ReplicaState.HEALTHY:
+            return True
+        # A rebuilding replica takes writes only for rows already copied;
+        # later rows pick the write up from the (already-written) source.
+        return (rep.state is ReplicaState.REBUILDING
+                and local_row < rep.progress)
+
+    # -- write path ---------------------------------------------------------
+
+    def apply_rows(self, rows, state) -> None:
+        """Mirror the given primary rows (all fields) into every live
+        replica — called after each committed onboard/add_rating."""
+        self.n_active = int(state.n_active)
+        for row in rows:
+            row = int(row)
+            s = self.shard_of(row)
+            lo = self._slices[s].start
+            vals = {f: np.asarray(getattr(state, f)[row]) for f in FIELDS}
+            for node in self.cfg.owners(s):
+                rep = self._replicas[(node, s)]
+                if self._live_for_write(rep, row - lo):
+                    for f in FIELDS:
+                        rep.data[f][row - lo] = vals[f]
+
+    # -- health -------------------------------------------------------------
+
+    def kill_node(self, node: int) -> list[tuple[int, int]]:
+        """Lose a node: every replica it stores is gone."""
+        lost = []
+        for (n, s), rep in self._replicas.items():
+            if n == node and rep.state is not ReplicaState.DEAD:
+                rep.state = ReplicaState.DEAD
+                rep.data = {}
+                rep.progress = 0
+                self.dead_marks += 1
+                lost.append((n, s))
+        if lost:
+            log.warning("node %d lost: %d replicas dead", node, len(lost))
+        return lost
+
+    def sweep(self) -> list[tuple[int, int]]:
+        """Run the invariant sweep over every healthy replica's slice;
+        poisoned replicas (bit-flips, partial loss) go DEAD.  Returns the
+        newly dead (node, shard) pairs."""
+        newly_dead = []
+        for (node, s), rep in self._replicas.items():
+            if rep.state is not ReplicaState.HEALTHY:
+                continue
+            sl = self._slices[s]
+            live = min(max(self.n_active - sl.start, 0), sl.stop - sl.start)
+            if live == 0:
+                continue
+            ok = _row_ok(rep.data["ratings"][:live],
+                         rep.data["norms"][:live],
+                         rep.data["sim_vals"][:live])
+            if not ok.all():
+                rep.state = ReplicaState.DEAD
+                rep.data = {}
+                self.dead_marks += 1
+                newly_dead.append((node, s))
+                log.warning("replica (node=%d, shard=%d) failed the "
+                            "invariant sweep; marked dead", node, s)
+        return newly_dead
+
+    def redundancy(self) -> int:
+        """Minimum healthy replica count over all shards."""
+        return min(
+            sum(self._replicas[(n, s)].state is ReplicaState.HEALTHY
+                for n in self.cfg.owners(s))
+            for s in range(self.cfg.n_shards))
+
+    def degraded(self) -> bool:
+        return self.redundancy() < self.cfg.r
+
+    def replica_states(self) -> dict[tuple[int, int], str]:
+        return {k: rep.state.value for k, rep in self._replicas.items()}
+
+    # -- read failover / repair --------------------------------------------
+
+    def read_row(self, field: str, row: int) -> np.ndarray | None:
+        """Row ``row`` of ``field`` from the first healthy replica of its
+        shard (failover read); None if every replica is down."""
+        s = self.shard_of(row)
+        local = row - self._slices[s].start
+        for node in self.cfg.owners(s):
+            rep = self._replicas[(node, s)]
+            if rep.state is ReplicaState.HEALTHY or (
+                    rep.state is ReplicaState.REBUILDING
+                    and local < rep.progress):
+                return rep.data[field][local]
+        return None
+
+    def bad_rows(self, state) -> np.ndarray:
+        """Live primary rows violating the arena invariant."""
+        n_act = int(state.n_active)
+        if n_act == 0:
+            return np.empty((0,), np.int64)
+        ok = _row_ok(np.asarray(state.ratings[:n_act]),
+                     np.asarray(state.norms[:n_act]),
+                     np.asarray(state.sim_vals[:n_act]))
+        return np.nonzero(~ok)[0]
+
+    def repair(self, state):
+        """Heal poisoned primary rows from healthy replicas.
+
+        Returns ``(fixed_state, repaired_row_ids)``; ``fixed_state`` is
+        None when some poisoned row has no surviving replica (the caller
+        falls back to snapshot rollback).  Pure data movement."""
+        import jax.numpy as jnp
+
+        rows = self.bad_rows(state)
+        if rows.size == 0:
+            return state, rows
+        host = {f: np.asarray(getattr(state, f)).copy() for f in FIELDS}
+        for row in rows:
+            for f in FIELDS:
+                src = self.read_row(f, int(row))
+                if src is None:
+                    log.error("row %d unrecoverable: all replicas of "
+                              "shard %d down", row, self.shard_of(int(row)))
+                    return None, rows
+                host[f][row] = src
+        self.repaired_rows += int(rows.size)
+        fixed = state._replace(
+            **{f: jnp.asarray(host[f]) for f in FIELDS})
+        return fixed, rows
+
+    # -- re-replication -----------------------------------------------------
+
+    def step_rebuild(self, budget_rows: int | None = None) -> int:
+        """Advance background re-replication by up to ``budget_rows`` row
+        copies (None/0 = the config's ``rebuild_rows``; 0 there = finish
+        everything).  Copies come from a surviving replica of the same
+        shard — never the primary.  Returns rows copied."""
+        if budget_rows is None:
+            budget_rows = self.cfg.rebuild_rows
+        remaining = budget_rows if budget_rows > 0 else None
+        copied = 0
+        for (node, s), rep in sorted(self._replicas.items()):
+            if rep.state is ReplicaState.DEAD:
+                src = self._source_for(s, exclude=node)
+                if src is None:
+                    continue           # no survivor yet; stay dead
+                rep.state = ReplicaState.REBUILDING
+                rep.progress = 0
+                rep.data = {f: np.empty_like(src.data[f]) for f in FIELDS}
+            if rep.state is not ReplicaState.REBUILDING:
+                continue
+            src = self._source_for(s, exclude=node)
+            if src is None:
+                continue
+            n_rows = self._slices[s].stop - self._slices[s].start
+            take = n_rows - rep.progress
+            if remaining is not None:
+                take = min(take, remaining)
+            if take > 0:
+                lo, hi = rep.progress, rep.progress + take
+                for f in FIELDS:
+                    rep.data[f][lo:hi] = src.data[f][lo:hi]
+                rep.progress += take
+                copied += take
+                if remaining is not None:
+                    remaining -= take
+            if rep.progress >= n_rows:
+                rep.state = ReplicaState.HEALTHY
+                rep.progress = 0
+            if remaining == 0:
+                break
+        self.rebuilt_rows += copied
+        return copied
+
+    def _source_for(self, shard: int, exclude: int) -> _Replica | None:
+        for node in self.cfg.owners(shard):
+            if node == exclude:
+                continue
+            rep = self._replicas[(node, shard)]
+            if rep.state is ReplicaState.HEALTHY:
+                return rep
+        return None
+
+    def stats(self) -> dict:
+        states = list(self._replicas.values())
+        return {
+            "n_shards": self.cfg.n_shards,
+            "r": self.cfg.r,
+            "redundancy": self.redundancy(),
+            "healthy": sum(r.state is ReplicaState.HEALTHY for r in states),
+            "rebuilding": sum(r.state is ReplicaState.REBUILDING
+                              for r in states),
+            "dead": sum(r.state is ReplicaState.DEAD for r in states),
+            "rebuilt_rows": self.rebuilt_rows,
+            "repaired_rows": self.repaired_rows,
+        }

@@ -1,12 +1,14 @@
 from repro.serving.cf_server import (CFServer, ServerStats,
-                                     LEVEL_SHED, LEVEL_TRADITIONAL,
-                                     LEVEL_TWINSEARCH)
+                                     LEVEL_DEGRADED, LEVEL_SHED,
+                                     LEVEL_TRADITIONAL, LEVEL_TWINSEARCH)
 from repro.serving.dedup import DedupPlan, dedup_batch, fan_out, prompt_hash
 from repro.serving.guard import (Quarantine, Rejection, RetryPolicy,
                                  call_with_retry)
 from repro.serving.lm_server import LMServer
+from repro.serving.wal import WalRecord, WriteAheadLog
 
 __all__ = ["CFServer", "ServerStats", "DedupPlan", "dedup_batch", "fan_out",
            "prompt_hash", "LMServer", "Quarantine", "Rejection",
            "RetryPolicy", "call_with_retry", "LEVEL_TWINSEARCH",
-           "LEVEL_TRADITIONAL", "LEVEL_SHED"]
+           "LEVEL_TRADITIONAL", "LEVEL_DEGRADED", "LEVEL_SHED",
+           "WalRecord", "WriteAheadLog"]

@@ -19,20 +19,44 @@ Resilience contract: **no public entrypoint raises to the caller.**
   * Capacity exhaustion triggers **arena rotation**
     (``core/rotation.py``): the write region compacts into a larger base
     arena via PR 1's fused k-way merge — onboarding continues past the
-    original ``capacity_extra`` indefinitely.
+    original ``capacity_extra`` indefinitely.  ``rotate_headroom`` scales
+    the fresh write region with the absorbed burst (hysteresis against
+    back-to-back synchronous rotations); each rotation's duration lands
+    in ``ServerStats.rotation_ms``.
   * Onboard latencies feed a ``StragglerMonitor`` (``training/elastic.py``)
-    driving a **degradation ladder**: twinsearch -> traditional-build ->
-    shed-with-backpressure, stepping down on straggler verdicts and back
-    up after a healthy streak (shed expires on a cooldown clock).  Every
-    transition is counted in ``ServerStats``.
+    driving a **degradation ladder**: twinsearch -> traditional ->
+    degraded-replica -> shed-with-backpressure.  Latency verdicts walk
+    twinsearch -> traditional -> shed directly; the ``degraded`` rung is
+    entered when replication redundancy drops (a replica died) and pins
+    the server at the traditional path until background re-replication
+    restores r-way redundancy.  Every transition is counted in
+    ``ServerStats``.
   * The jitted onboard call runs under retry-with-exponential-backoff and
     a deadline (transient executor faults); a call that still fails is
-    quarantined, not raised.
+    quarantined, not raised (and its write-ahead record is aborted).
+
+Durability contract: **a crash or a shard loss never forces a similarity
+recompute.**
+
+  * Every mutating op is appended to a **write-ahead log**
+    (``serving/wal.py``, ``wal_dir``/``wal_fsync`` knobs) *before* it is
+    applied; on restart ``CFServer.recover(...)`` replays the log on top
+    of the newest durable checkpoint, reproducing the pre-crash arena
+    bit-exactly.  The log truncates at each durable snapshot and rewinds
+    on rollback, so it always holds exactly the ops since the state the
+    next recovery would start from.
+  * With ``replication=ReplicationConfig(...)`` the arena's row shards
+    are mirrored r-way (``distributed/replication.py``).  A poisoned
+    primary row — bit-flip, lost shard — is *healed* from a surviving
+    replica (pure data movement) instead of rolled back; a lost replica
+    is rebuilt from survivors incrementally between requests.  Rollback
+    to the last good snapshot remains the backstop when no replica
+    survives.
   * Periodic atomic **snapshots** (in-memory always; on disk via
-    ``training/checkpoint.py`` when ``snapshot_dir`` is set) pair with a
-    cheap NaN/ordering invariant check (``kernels/verify_rows``): a
-    poisoned arena — bit-flips, simulated shard loss — is detected within
-    ``check_every`` onboards and rolled back to the last good snapshot.
+    ``training/checkpoint.py`` when ``snapshot_dir`` is set, now with
+    per-leaf CRC32 verification and fall-back-to-previous-step on
+    corruption) pair with a cheap NaN/ordering invariant check
+    (``kernels/verify_rows``) every ``check_every`` onboards.
 
 State is the fixed-capacity ``CFState`` (jit-friendly); all mutating ops
 are jitted once per arena shape and reused.  ``stats`` tracks twin hits /
@@ -56,8 +80,10 @@ from repro.core import baseline as base_lib
 from repro.core import twinsearch as ts
 from repro.core import update as upd_lib
 from repro.core.rotation import rotate_arena
+from repro.distributed.replication import ReplicatedArena, ReplicationConfig
 from repro.kernels.verify_rows.ops import arena_healthy
 from repro.serving import guard
+from repro.serving.wal import WriteAheadLog
 from repro.training import checkpoint
 from repro.training.elastic import Action, StragglerMonitor
 
@@ -66,9 +92,11 @@ log = logging.getLogger(__name__)
 # Degradation ladder levels (ascending = more degraded).
 LEVEL_TWINSEARCH = 0
 LEVEL_TRADITIONAL = 1
-LEVEL_SHED = 2
+LEVEL_DEGRADED = 2          # replica redundancy lost; rebuilding in background
+LEVEL_SHED = 3
 LEVEL_NAMES = {LEVEL_TWINSEARCH: "twinsearch",
                LEVEL_TRADITIONAL: "traditional",
+               LEVEL_DEGRADED: "degraded",
                LEVEL_SHED: "shed"}
 
 
@@ -85,18 +113,24 @@ class ServerStats:
     rotations: int = 0
     snapshots: int = 0
     rollbacks: int = 0
+    repairs: int = 0            # poisoned rows healed from replicas
     degradations: int = 0
     recoveries: int = 0
+    wal_appends: int = 0
+    wal_replayed: int = 0
     latency_window: int = 1024
     onboard_ms: deque = field(init=False)
+    rotation_ms: deque = field(init=False)
 
     def __post_init__(self) -> None:
-        # Fixed-size ring buffer: sustained traffic must not grow host
+        # Fixed-size ring buffers: sustained traffic must not grow host
         # memory; summary() percentiles are over the trailing window.
         self.onboard_ms = deque(maxlen=self.latency_window)
+        self.rotation_ms = deque(maxlen=64)
 
     def summary(self) -> dict:
         ms = sorted(self.onboard_ms) or [0.0]
+        rot = sorted(self.rotation_ms) or [0.0]
         return {
             "onboarded": self.onboarded,
             "twin_hits": self.twin_hits,
@@ -109,10 +143,15 @@ class ServerStats:
             "rotations": self.rotations,
             "snapshots": self.snapshots,
             "rollbacks": self.rollbacks,
+            "repairs": self.repairs,
             "degradations": self.degradations,
             "recoveries": self.recoveries,
+            "wal_appends": self.wal_appends,
+            "wal_replayed": self.wal_replayed,
             "onboard_p50_ms": ms[len(ms) // 2],
             "onboard_p99_ms": ms[min(len(ms) - 1, int(len(ms) * 0.99))],
+            "rotation_p50_ms": rot[len(rot) // 2],
+            "rotation_max_ms": rot[-1],
         }
 
 
@@ -130,12 +169,18 @@ class CFServer:
                  snapshot_every: int = 64,
                  snapshot_dir: str | None = None,
                  snapshot_keep: int = 3,
-                 check_every: int = 8):
+                 check_every: int = 8,
+                 rotate_headroom: float = 1.0,
+                 wal_dir: str | None = None,
+                 wal_fsync: bool = True,
+                 replication: ReplicationConfig | None = None,
+                 recover: bool = False):
         self.n_base = int(ratings.shape[0])
         self.k_cap = int(capacity_extra)
         self.c = c_probes
         self.tol = sim_tol
         self.rating_range = (float(rating_range[0]), float(rating_range[1]))
+        self.rotate_headroom = float(rotate_headroom)
         self.state: CFState = jax.jit(
             lambda R: build_state(R, capacity_extra=capacity_extra,
                                   measure=measure))(jnp.asarray(
@@ -166,22 +211,50 @@ class CFServer:
         self._since_snapshot = 0
         self._since_check = 0
 
+        # Durability machinery.  ``_seq`` is the monotonic mutation counter:
+        # it numbers WAL records AND disk checkpoints, so "checkpoint at S
+        # plus WAL records with seq > S" is always the current state.
+        self._seq = 0
+        self.wal = (WriteAheadLog(wal_dir, fsync=wal_fsync)
+                    if wal_dir is not None else None)
+        self._replaying = False
+        self._crash_hook = None        # test seam: see testing/faults.py
+        self.replicas: ReplicatedArena | None = None
+
         # All jitted entrypoints are constructed eagerly (construction is
         # free — tracing happens on first call) so a first-call exception
         # can never leave the server half-initialised; the update cache is
         # still *computed* lazily (it is O(N^2) memory).
         self._cache = None
         self._build_jits()
+
+        if recover:
+            self._recover_state()
+
+        if replication is not None:
+            self.replicas = ReplicatedArena(self.state, replication)
+
         self._snapshot = None
         self._take_snapshot()            # the construction-time good state
+
+    @classmethod
+    def recover(cls, ratings: np.ndarray, **kwargs) -> "CFServer":
+        """Rebuild a server after a crash: restore the newest durable
+        checkpoint under ``snapshot_dir`` (falling back past corrupt
+        steps), then replay the WAL suffix under ``wal_dir`` through the
+        same jitted ops — the recovered arena is bit-identical to the
+        pre-crash one, with zero similarity recompute.  Pass the same
+        construction knobs as the original server."""
+        kwargs["recover"] = True
+        return cls(ratings, **kwargs)
 
     # -- internal machinery -------------------------------------------------
 
     def _build_jits(self) -> None:
         """(Re)wrap the jitted ops for the *current* arena geometry.
-        Called at construction and after every rotation/rollback — the
-        closures capture ``n_base``/``s_max``/``k_cap``, which rotation
-        changes."""
+        Called at construction and after every rotation/rollback/restore —
+        the closures capture ``n_base``/``s_max``/``k_cap``, which those
+        transitions change."""
         self.s_max = set0_cap(self.n_base)
         n_base, k_cap = self.n_base, self.k_cap
         self._onboard = jax.jit(lambda st, r0, probes: ts.onboard_twinsearch(
@@ -201,6 +274,17 @@ class CFServer:
         self.quarantine.record(kind, reason, payload, detail)
         return {"status": "rejected", "reason": reason}
 
+    def _crashpoint(self, name: str) -> None:
+        """Deterministic crash injection seam (``testing/faults.py``
+        installs the hook); a no-op in production."""
+        if self._crash_hook is not None:
+            self._crash_hook(name)
+
+    # -- degradation ladder -------------------------------------------------
+
+    def _replicas_degraded(self) -> bool:
+        return self.replicas is not None and self.replicas.degraded()
+
     def _set_level(self, level: int) -> None:
         if level == self.level:
             return
@@ -217,68 +301,231 @@ class CFServer:
         if level == LEVEL_SHED:
             self._shed_until = self._clock() + self.shed_cooldown_s
 
+    def _step_down(self) -> None:
+        """One recovery step down the ladder.  The ``degraded`` rung is
+        owned by replication: stepping out of SHED lands on it while
+        redundancy is still lost, and the rung itself is pinned until
+        re-replication completes (``_replication_tick`` releases it)."""
+        if self.level == LEVEL_SHED:
+            self._set_level(LEVEL_DEGRADED if self._replicas_degraded()
+                            else LEVEL_TRADITIONAL)
+        elif self.level == LEVEL_DEGRADED:
+            if not self._replicas_degraded():
+                self._set_level(LEVEL_TRADITIONAL)
+        else:
+            self._set_level(max(LEVEL_TWINSEARCH, self.level - 1))
+
     def _apply_monitor(self, action: Action) -> None:
         if action is Action.ABORT:
             # A hang-scale latency: shed immediately, don't walk the ladder.
             self._set_level(LEVEL_SHED)
         elif action is Action.CHECKPOINT_AND_SHRINK:
-            self._set_level(min(self.level + 1, LEVEL_SHED))
+            # Latency verdicts walk twinsearch -> traditional -> shed; the
+            # degraded rung is entered only by replica-loss events.
+            self._set_level(LEVEL_TRADITIONAL
+                            if self.level == LEVEL_TWINSEARCH
+                            else LEVEL_SHED)
         else:
             self._healthy_streak += 1
             if (self.level > LEVEL_TWINSEARCH
                     and self._healthy_streak >= self.recover_after):
-                self._set_level(self.level - 1)
+                self._step_down()
+
+    def _replication_tick(self) -> None:
+        """Per-request background replication work: advance re-replication
+        by the configured row budget and keep the ladder's ``degraded``
+        rung in sync with actual redundancy."""
+        if self.replicas is None:
+            return
+        self.replicas.step_rebuild()
+        if self.replicas.degraded():
+            if self.level < LEVEL_DEGRADED:
+                self._set_level(LEVEL_DEGRADED)
+        elif self.level == LEVEL_DEGRADED:
+            self._set_level(LEVEL_TRADITIONAL)
+
+    # -- rotation -----------------------------------------------------------
 
     def _rotate(self) -> None:
         """Grow the arena: compact the write region into a new base (see
         ``core/rotation.py``) and retarget every jitted op at the new
         geometry.  The incremental-update cache keys on the old shapes and
-        is dropped."""
+        is dropped; replicas re-mirror the new geometry."""
         old_capacity = self.state.capacity
+        t0 = time.perf_counter()
         self.state = rotate_arena(self.state, n_base=self.n_base,
-                                  extra=self.k_cap)
+                                  extra=self.k_cap,
+                                  headroom=self.rotate_headroom)
+        self.state.sim_vals.block_until_ready()
+        dt_ms = (time.perf_counter() - t0) * 1e3
         self.n_base = int(self.state.n_active)
+        self.k_cap = self.state.capacity - self.n_base
         self._cache = None
         self._build_jits()
         self.stats.rotations += 1
-        log.info("arena rotated: capacity %d -> %d (n_base=%d)",
-                 old_capacity, self.state.capacity, self.n_base)
+        self.stats.rotation_ms.append(dt_ms)
+        if self.replicas is not None:
+            self.replicas.reset(self.state)
+        log.info("arena rotated: capacity %d -> %d (n_base=%d, %.1fms)",
+                 old_capacity, self.state.capacity, self.n_base, dt_ms)
+
+    # -- durability: WAL / snapshot / rollback / recovery -------------------
+
+    def _log(self, op: str, fields: dict | None = None,
+             arrays: dict | None = None) -> int:
+        """Assign the next mutation sequence number and (when a WAL is
+        attached and we are not replaying) append the record *before* the
+        op is applied — the write-ahead contract."""
+        self._seq += 1
+        if self.wal is not None and not self._replaying:
+            self.wal.append(self._seq, op, fields, arrays)
+            self.stats.wal_appends += 1
+        return self._seq
 
     def _take_snapshot(self) -> None:
-        self._snapshot = (self.state, self.n_base)
+        self._snapshot = (self.state, self.n_base, self._key, self._seq)
         self.stats.snapshots += 1
         self._since_snapshot = 0
         if self.snapshot_dir is not None:
-            checkpoint.save(self.snapshot_dir, self.stats.onboarded,
-                            self.state,
-                            extra={"n_base": self.n_base},
+            checkpoint.save(self.snapshot_dir, self._seq, self.state,
+                            extra={"n_base": self.n_base,
+                                   "key": np.asarray(self._key).tolist(),
+                                   "wal_seq": self._seq},
                             keep_last=self.snapshot_keep)
+            if self.wal is not None:
+                # The checkpoint subsumes every logged op; drop them.  The
+                # incremental dots cache is re-seeded at this boundary so a
+                # replayed timeline (which must init it from the restored
+                # ratings) stays bit-identical to the live one.
+                self.wal.truncate_through(self._seq)
+                self._cache = None
 
     def _rollback(self) -> None:
-        state, n_base = self._snapshot
+        state, n_base, key, seq = self._snapshot
         geometry_changed = (state.capacity != self.state.capacity
                             or n_base != self.n_base)
-        self.state, self.n_base = state, n_base
+        self.state, self.n_base, self._key = state, n_base, key
+        self.k_cap = state.capacity - n_base
+        self._seq = seq
         self._cache = None
         if geometry_changed:
             self._build_jits()
+        if self.wal is not None:
+            self.wal.truncate_after(seq)
+        if self.replicas is not None:
+            self.replicas.reset(self.state)
         self.stats.rollbacks += 1
         self._since_check = 0
         self._since_snapshot = 0
         log.error("arena invariant violated; rolled back to last good "
                   "snapshot (n_active=%d)", int(state.n_active))
 
+    def _recover_state(self) -> None:
+        """Restore the newest loadable checkpoint, then replay the WAL
+        suffix.  Zero similarity math: the checkpoint is a byte copy and
+        replay re-runs only the logged (cheap) maintenance ops."""
+        restored = False
+        if self.snapshot_dir is not None:
+            try:
+                tree, step, extra = checkpoint.restore(self.snapshot_dir,
+                                                       self.state)
+            except FileNotFoundError:
+                pass
+            else:
+                self.state = tree
+                self.n_base = int(extra.get("n_base", self.n_base))
+                self.k_cap = self.state.capacity - self.n_base
+                if "key" in extra:
+                    self._key = jnp.asarray(extra["key"], jnp.uint32)
+                self._seq = int(extra.get("wal_seq", step))
+                self._cache = None
+                self._build_jits()
+                restored = True
+                log.info("restored checkpoint step %d (n_active=%d)",
+                         step, int(self.state.n_active))
+        if self.wal is not None:
+            records = self.wal.records(after_seq=self._seq)
+            if records and not restored and records[0].seq > 1:
+                raise RuntimeError(
+                    f"WAL starts at seq {records[0].seq} but no checkpoint "
+                    f"could be restored — earlier ops were truncated into a "
+                    f"checkpoint that is now missing or corrupt")
+            self._replay(records)
+
+    def _replay(self, records) -> None:
+        self._replaying = True
+        try:
+            for rec in records:
+                self._seq = rec.seq
+                if rec.op == "rotate":
+                    self._rotate()
+                elif rec.op == "onboard":
+                    self._replay_onboard(rec)
+                elif rec.op == "add_rating":
+                    self._replay_add_rating(rec)
+                else:
+                    log.warning("unknown WAL op %r at seq %d skipped",
+                                rec.op, rec.seq)
+                self.stats.wal_replayed += 1
+        finally:
+            self._replaying = False
+
+    def _replay_onboard(self, rec) -> None:
+        r0 = jnp.asarray(rec.arrays["ratings"].astype(np.float32))
+        use_twin = bool(rec.fields.get("use_twin", False))
+        if use_twin:
+            # Advance the PRNG stream exactly as the live path did; the
+            # recorded probes equal the re-derived ones, but the record is
+            # authoritative (recovery works even from a foreign key state).
+            self._key, _ = jax.random.split(self._key)
+            probes = jnp.asarray(rec.arrays["probes"])
+            new_state, res = self._onboard(self.state, r0, probes)
+            found, overflowed = bool(res.found), bool(res.overflowed)
+        else:
+            new_state = self._onboard_trad(self.state, r0)
+            found = overflowed = False
+        new_state.n_active.block_until_ready()
+        self._commit_onboard(new_state, found, overflowed)
+
+    def _replay_add_rating(self, rec) -> None:
+        f = rec.fields
+        self._apply_add_rating(int(f["user"]), int(f["item"]),
+                               float(f["rating"]))
+
+    # -- health check + snapshot cadence ------------------------------------
+
+    def _state_ok(self) -> bool:
+        """Verify the arena invariant; heal poisoned rows from replicas
+        (exact, similarity-free) when possible, roll back to the last good
+        snapshot otherwise.  False iff a rollback happened."""
+        if bool(self._healthy(self.state.sim_vals, self.state.ratings,
+                              self.state.norms, self.state.n_active)):
+            return True
+        if self.replicas is not None:
+            fixed, rows = self.replicas.repair(self.state)
+            if fixed is not None and bool(self._healthy(
+                    fixed.sim_vals, fixed.ratings, fixed.norms,
+                    fixed.n_active)):
+                self.state = fixed
+                self._cache = None
+                self.stats.repairs += 1
+                log.warning("healed %d poisoned arena rows from replicas",
+                            len(rows))
+                return True
+        self._rollback()
+        return False
+
     def _check_and_snapshot(self) -> bool:
         """Periodic poison detection + snapshot cadence.  Returns False if
-        the current state failed the invariant and was rolled back."""
+        the current state failed the invariant and was rolled back (a
+        replica-healed state counts as healthy)."""
         self._since_check += 1
         self._since_snapshot += 1
         if self._since_check >= self.check_every:
             self._since_check = 0
-            if not bool(self._healthy(self.state.sim_vals,
-                                      self.state.ratings, self.state.norms,
-                                      self.state.n_active)):
-                self._rollback()
+            if self.replicas is not None:
+                self.replicas.sweep()
+            if not self._state_ok():
                 return False
         if self._since_snapshot >= self.snapshot_every:
             # Never snapshot unverified state: a snapshot of a poisoned
@@ -290,6 +537,17 @@ class CFServer:
 
     # -- onboarding ---------------------------------------------------------
 
+    def _commit_onboard(self, new_state: CFState, found: bool,
+                        overflowed: bool) -> None:
+        self.state = new_state
+        self.stats.onboarded += 1
+        self.stats.twin_hits += found
+        self.stats.fallbacks += not found
+        self.stats.overflows += overflowed
+        if self.replicas is not None:
+            self.replicas.apply_rows([int(new_state.n_active) - 1],
+                                     new_state)
+
     def onboard_user(self, ratings: np.ndarray, *,
                      use_twinsearch: bool = True) -> tuple[int, dict]:
         reason = guard.validate_ratings_vector(
@@ -299,18 +557,24 @@ class CFServer:
             return -1, {**self._reject("onboard", reason, ratings),
                         "twin_found": False}
 
+        self._replication_tick()
         if self.level == LEVEL_SHED:
             if self._clock() < self._shed_until:
                 self.stats.shed += 1
                 return -1, {"status": "shed", "twin_found": False,
                             "retry_after_s": self._shed_until - self._clock()}
             # Cooldown expired: probe the cheaper build path again.
-            self._set_level(LEVEL_TRADITIONAL)
+            self._set_level(LEVEL_DEGRADED if self._replicas_degraded()
+                            else LEVEL_TRADITIONAL)
 
+        self._crashpoint("onboard.pre_wal")
         if int(self.state.n_active) >= self.state.capacity:
+            self._log("rotate")
+            self._crashpoint("rotate.post_wal")
             self._rotate()
 
-        r0 = jnp.asarray(np.asarray(ratings, dtype=np.float32))
+        r0_np = np.asarray(ratings, dtype=np.float32)
+        r0 = jnp.asarray(r0_np)
         use_twin = use_twinsearch and self.level == LEVEL_TWINSEARCH
         if use_twin:
             self._key, sub = jax.random.split(self._key)
@@ -321,10 +585,19 @@ class CFServer:
                 new_state.n_active.block_until_ready()
                 return new_state, bool(res.found), bool(res.overflowed)
         else:
+            probes = None
+
             def run():
                 new_state = self._onboard_trad(self.state, r0)
                 new_state.n_active.block_until_ready()
                 return new_state, False, False
+
+        seq = self._log(
+            "onboard", fields={"use_twin": bool(use_twin)},
+            arrays={"ratings": r0_np,
+                    "probes": (np.asarray(probes) if probes is not None
+                               else np.empty((0,), np.int32))})
+        self._crashpoint("onboard.post_wal")
 
         self.monitor.step_started()
         t0 = time.perf_counter()
@@ -334,6 +607,9 @@ class CFServer:
         except Exception as e:          # noqa: BLE001 — contract: no raise
             self.monitor.step_finished()
             self.stats.errors += 1
+            # Compensate the write-ahead record: the op never applied, so
+            # replay must skip it.
+            self._log("abort", fields={"target": seq})
             self.quarantine.record("onboard", guard.R_ERROR, ratings,
                                    detail=repr(e))
             log.error("onboard failed after retries: %r", e)
@@ -343,12 +619,9 @@ class CFServer:
         self._apply_monitor(self.monitor.step_finished())
 
         self.stats.retries += retries
-        self.stats.twin_hits += found
-        self.stats.fallbacks += not found
-        self.stats.overflows += overflowed
-        self.state = new_state
-        self.stats.onboarded += 1
+        self._commit_onboard(new_state, found, overflowed)
         self.stats.onboard_ms.append(dt_ms)
+        self._crashpoint("onboard.post_commit")
 
         if not self._check_and_snapshot():
             return -1, {"status": "rolled_back", "twin_found": False,
@@ -364,6 +637,11 @@ class CFServer:
         if guard.validate_user_id(user, int(self.state.n_active)):
             self._reject("recommend", guard.R_USER_ID, user)
             return []
+        if self.replicas is not None:
+            # Failover read: heal any poisoned rows from replicas before
+            # answering, so a lost shard degrades durability, not answers.
+            self._replication_tick()
+            self._state_ok()
         scores, items = self._recommend(self.state, jnp.int32(user),
                                         k_neighbors=k_neighbors, n_rec=n)
         return [(int(i), float(s)) for s, i in zip(scores, items)]
@@ -375,10 +653,23 @@ class CFServer:
         if guard.validate_item_id(item, self.state.n_items):
             self._reject("predict", guard.R_ITEM_ID, item)
             return 0.0
+        if self.replicas is not None:
+            self._replication_tick()
+            self._state_ok()
         return float(self._predict(self.state, jnp.int32(user),
                                    jnp.int32(item), k=k))
 
     # -- maintenance --------------------------------------------------------
+
+    def _apply_add_rating(self, user: int, item: int,
+                          rating: float) -> None:
+        if self._cache is None:
+            self._cache = self._init_cache(self.state.ratings)
+        self.state, self._cache = self._add(
+            self.state, self._cache, jnp.int32(user), jnp.int32(item),
+            jnp.float32(rating))
+        if self.replicas is not None:
+            self.replicas.apply_rows([user], self.state)
 
     def add_rating(self, user: int, item: int, rating: float) -> bool:
         """Returns True iff the update was applied (False = quarantined)."""
@@ -392,9 +683,11 @@ class CFServer:
         if reason is not None:
             self._reject("add_rating", reason, rating)
             return False
-        if self._cache is None:
-            self._cache = self._init_cache(self.state.ratings)
-        self.state, self._cache = self._add(
-            self.state, self._cache, jnp.int32(user), jnp.int32(item),
-            jnp.float32(rating))
+        self._replication_tick()
+        self._crashpoint("add_rating.pre_wal")
+        self._log("add_rating", fields={"user": int(user), "item": int(item),
+                                        "rating": float(rating)})
+        self._crashpoint("add_rating.post_wal")
+        self._apply_add_rating(int(user), int(item), float(rating))
+        self._crashpoint("add_rating.post_commit")
         return True

@@ -1,0 +1,227 @@
+"""Write-ahead log for the CF serving path.
+
+The paper's economics make arena state precious: a similarity list is
+cheap to *maintain* (TwinSearch copy, incremental updates, rotation's
+pure data movement) but expensive to *rebuild* (the traditional O(n²m)
+scan).  A crash between snapshots therefore must not cost more than a
+replay of the operations since the last snapshot — never a similarity
+recompute.  This log makes that true:
+
+  * every mutating operation (``onboard`` / ``add_rating`` / ``rotate``)
+    is appended **before** it is applied, as a length-prefixed,
+    CRC32-checksummed record (optionally fsync'd) carrying everything
+    replay needs to reproduce the op bit-exactly — the validated rating
+    payload, the effective onboarding path (twinsearch vs traditional),
+    and the drawn probe rows;
+  * on restart, records with sequence numbers past the newest durable
+    checkpoint replay on top of it through the same jitted ops, so the
+    recovered arena is bit-identical to the pre-crash one;
+  * a torn tail (the record being written when the process died) fails
+    its length/CRC check and is truncated on open — a crash mid-append
+    never corrupts the log, it just loses the in-flight record;
+  * truncation is tied to the snapshot cadence: a durable checkpoint at
+    sequence S drops every record with seq <= S (``truncate_through``),
+    and a rollback to the snapshot at S drops every record with seq > S
+    (``truncate_after``) so the log always equals "ops since the state
+    the next recovery would start from".
+
+Record payload layout: one JSON line (seq, op, scalar fields, array
+manifest) followed by the raw little-endian bytes of each array.  Arrays
+round-trip exactly — no text encoding of floats anywhere.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import struct
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+MAGIC = b"CFWAL1\n"
+_HDR = struct.Struct("<II")            # (payload length, payload crc32)
+WAL_FILE = "wal.log"
+
+
+@dataclass(frozen=True)
+class WalRecord:
+    seq: int
+    op: str                            # "onboard" | "add_rating" | "rotate" | "abort"
+    fields: dict = field(default_factory=dict)
+    arrays: dict = field(default_factory=dict)   # name -> np.ndarray
+
+
+def _encode(rec: WalRecord) -> bytes:
+    manifest = []
+    blobs = []
+    for name, arr in rec.arrays.items():
+        a = np.ascontiguousarray(arr)
+        manifest.append([name, str(a.dtype), list(a.shape)])
+        blobs.append(a.tobytes())
+    meta = json.dumps({"seq": rec.seq, "op": rec.op, "fields": rec.fields,
+                       "arrays": manifest}).encode()
+    return meta + b"\n" + b"".join(blobs)
+
+
+def _decode(payload: bytes) -> WalRecord:
+    nl = payload.index(b"\n")
+    meta = json.loads(payload[:nl].decode())
+    arrays = {}
+    off = nl + 1
+    for name, dtype, shape in meta["arrays"]:
+        dt = np.dtype(dtype)
+        n = int(np.prod(shape)) if shape else 1
+        nbytes = n * dt.itemsize
+        arrays[name] = np.frombuffer(
+            payload[off:off + nbytes], dtype=dt).reshape(shape).copy()
+        off += nbytes
+    return WalRecord(seq=int(meta["seq"]), op=meta["op"],
+                     fields=meta["fields"], arrays=arrays)
+
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync so a rename survives power loss."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    except OSError:                     # not supported on this platform/fs
+        pass
+
+
+class WriteAheadLog:
+    """Single append-only segment under ``wal_dir`` with torn-tail repair.
+
+    ``fsync=True`` (the default) makes each append durable before the
+    operation it logs is applied; ``fsync=False`` trades the crash-window
+    of one OS buffer flush for append latency.
+    """
+
+    def __init__(self, wal_dir: str, *, fsync: bool = True):
+        os.makedirs(wal_dir, exist_ok=True)
+        self.dir = wal_dir
+        self.path = os.path.join(wal_dir, WAL_FILE)
+        self.fsync = bool(fsync)
+        self.appended = 0
+        self.truncations = 0
+        if not os.path.exists(self.path):
+            with open(self.path, "wb") as f:
+                f.write(MAGIC)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(wal_dir)
+        self.last_seq, self._n_records = self._repair_tail()
+        self._f = open(self.path, "ab")
+
+    # -- scan / repair ------------------------------------------------------
+
+    def _scan(self) -> tuple[list[WalRecord], int]:
+        """All intact records + the byte offset where intact data ends."""
+        records: list[WalRecord] = []
+        with open(self.path, "rb") as f:
+            head = f.read(len(MAGIC))
+            if head != MAGIC:
+                log.error("WAL %s has a bad magic header; treating as empty",
+                          self.path)
+                return [], len(MAGIC)
+            good_end = f.tell()
+            while True:
+                hdr = f.read(_HDR.size)
+                if len(hdr) < _HDR.size:
+                    break                        # clean EOF or torn header
+                length, crc = _HDR.unpack(hdr)
+                payload = f.read(length)
+                if len(payload) < length or zlib.crc32(payload) != crc:
+                    break                        # torn/corrupt tail record
+                try:
+                    records.append(_decode(payload))
+                except Exception:                # undecodable despite CRC
+                    break
+                good_end = f.tell()
+        return records, good_end
+
+    def _repair_tail(self) -> tuple[int, int]:
+        records, good_end = self._scan()
+        size = os.path.getsize(self.path)
+        if good_end < size:
+            log.warning("WAL %s: truncating torn tail (%d -> %d bytes)",
+                        self.path, size, good_end)
+            with open(self.path, "r+b") as f:
+                f.truncate(good_end)
+                f.flush()
+                os.fsync(f.fileno())
+        last = records[-1].seq if records else 0
+        return last, len(records)
+
+    # -- append / read ------------------------------------------------------
+
+    def append(self, seq: int, op: str, fields: dict | None = None,
+               arrays: dict | None = None) -> None:
+        payload = _encode(WalRecord(seq=seq, op=op, fields=fields or {},
+                                    arrays=arrays or {}))
+        self._f.write(_HDR.pack(len(payload), zlib.crc32(payload)) + payload)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.last_seq = seq
+        self._n_records += 1
+        self.appended += 1
+
+    def records(self, after_seq: int = 0) -> list[WalRecord]:
+        """Intact records with seq > ``after_seq``, in append order,
+        with aborted operations (compensation records) filtered out."""
+        recs, _ = self._scan()
+        aborted = {r.fields.get("target") for r in recs if r.op == "abort"}
+        return [r for r in recs
+                if r.seq > after_seq and r.op != "abort"
+                and r.seq not in aborted]
+
+    def __len__(self) -> int:
+        return self._n_records
+
+    def size_bytes(self) -> int:
+        return os.path.getsize(self.path)
+
+    # -- truncation ---------------------------------------------------------
+
+    def truncate_through(self, seq: int) -> None:
+        """Drop records with seq <= ``seq`` — a durable checkpoint at
+        ``seq`` has subsumed them."""
+        self._rewrite(lambda r: r.seq > seq)
+
+    def truncate_after(self, seq: int) -> None:
+        """Drop records with seq > ``seq`` — a rollback discarded their
+        effects."""
+        self._rewrite(lambda r: r.seq <= seq)
+
+    def _rewrite(self, keep) -> None:
+        recs, _ = self._scan()
+        kept = [r for r in recs if keep(r)]
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(MAGIC)
+            for r in kept:
+                payload = _encode(r)
+                f.write(_HDR.pack(len(payload), zlib.crc32(payload)))
+                f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)               # atomic publish
+        _fsync_dir(self.dir)
+        self._f = open(self.path, "ab")
+        self._n_records = len(kept)
+        self.last_seq = kept[-1].seq if kept else max(self.last_seq, 0)
+        self.truncations += 1
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        except Exception:
+            pass

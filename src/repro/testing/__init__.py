@@ -1,7 +1,11 @@
 """Deterministic fault-injection tooling for resilience tests."""
-from repro.testing.faults import (FakeClock, Flaky, MalformedRequests,
-                                 capacity_flood, inject_latency,
-                                 poison_state)
+from repro.testing.faults import (CRASH_POINTS, FakeClock, Flaky,
+                                 MalformedRequests, SimulatedCrash,
+                                 capacity_flood, forbid_similarity_kernels,
+                                 inject_latency, install_crash,
+                                 kill_replica, poison_state)
 
-__all__ = ["FakeClock", "Flaky", "MalformedRequests", "capacity_flood",
-           "inject_latency", "poison_state"]
+__all__ = ["CRASH_POINTS", "FakeClock", "Flaky", "MalformedRequests",
+           "SimulatedCrash", "capacity_flood", "forbid_similarity_kernels",
+           "inject_latency", "install_crash", "kill_replica",
+           "poison_state"]

@@ -17,7 +17,17 @@ seed — no wall-clock sleeps, no flaky randomness:
     rows would — including whole shard-row-slice loss via
     ``distributed.sharding.shard_row_slice``;
   * **capacity floods** (``capacity_flood``): a scripted onboard burst far
-    past ``capacity_extra``, forcing repeated arena rotations.
+    past ``capacity_extra``, forcing repeated arena rotations;
+  * **process crashes** (``SimulatedCrash`` + ``install_crash``): kill the
+    server at a named crash point in the WAL-ordered mutation flow
+    (before/after the log append, after commit) — ``SimulatedCrash``
+    derives from ``BaseException`` so it sails through every
+    ``except Exception`` in the no-raise machinery, exactly like a real
+    SIGKILL would;
+  * **replica loss** (``kill_replica``): a node dies — its replica copies
+    vanish (``ReplicatedArena.kill_node``) and the primary arena rows of
+    its home shard turn to garbage — plus ``forbid_similarity_kernels``
+    to prove recovery is pure data movement.
 
 The harness mutates server-internal seams (``_onboard`` /
 ``_onboard_trad`` wrappers, direct ``state`` replacement) on purpose: the
@@ -172,3 +182,63 @@ def capacity_flood(server, pool: np.ndarray, n: int,
     for _ in range(n):
         out.append(server.onboard_user(pool[rng.integers(0, len(pool))]))
     return out
+
+
+class SimulatedCrash(BaseException):
+    """Process death at a crash point.  Deliberately NOT an ``Exception``:
+    the serving layer's no-raise machinery (retry wrapper, onboard
+    try/except) catches ``Exception`` only, so this propagates out of any
+    entrypoint the way a SIGKILL ends a process mid-op."""
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point!r}")
+        self.point = point
+
+
+# The named points ``CFServer._crashpoint`` visits, in mutation-flow order.
+CRASH_POINTS = ("onboard.pre_wal", "rotate.post_wal", "onboard.post_wal",
+                "onboard.post_commit", "add_rating.pre_wal",
+                "add_rating.post_wal", "add_rating.post_commit")
+
+
+def install_crash(server, point: str, *, nth: int = 1) -> None:
+    """Arm the server's crash hook: the ``nth`` time execution reaches the
+    named crash point, raise ``SimulatedCrash``.  The server object is
+    dead after that — recovery means building a NEW server with
+    ``CFServer.recover(...)`` over the same ``wal_dir``/``snapshot_dir``."""
+    remaining = {"n": int(nth)}
+
+    def hook(name: str) -> None:
+        if name == point:
+            remaining["n"] -= 1
+            if remaining["n"] <= 0:
+                raise SimulatedCrash(point)
+
+    server._crash_hook = hook
+
+
+def kill_replica(server, node: int) -> np.ndarray:
+    """Lose one node of the replicated arena: its replica copies are gone
+    and the primary arena rows of its home shard (shard ``node`` under
+    chained declustering) turn to garbage.  Returns the poisoned primary
+    rows; the server must heal them from surviving replicas."""
+    replicas = server.replicas
+    assert replicas is not None, "server has no replication configured"
+    replicas.kill_node(node)
+    return poison_state(server, shard=node,
+                        n_shards=replicas.cfg.n_shards)
+
+
+def forbid_similarity_kernels(server) -> None:
+    """Replace every similarity-computing callable on the server with a
+    raiser — replica repair and re-replication must be pure data movement,
+    and this makes any cheat raise immediately."""
+
+    def boom(*_a, **_k):
+        raise AssertionError("similarity kernel invoked during "
+                             "replication recovery")
+
+    server._onboard = boom
+    server._onboard_trad = boom
+    server._init_cache = boom
+    server._add = boom

@@ -1,23 +1,37 @@
 """Fault-tolerant checkpointing.
 
 Layout: ``<dir>/step_<n>/`` holding one ``.npy`` per pytree leaf (keyed by
-its flattened path) + ``meta.json`` (step, leaf manifest, data-pipeline
-state).  Writes are atomic (tmp dir + rename) so a crash mid-save never
-corrupts the latest checkpoint; ``keep_last`` prunes old steps; restore
-accepts a target sharding pytree so a checkpoint taken on one mesh loads
-onto a different mesh shape (elastic resize after node loss).
+its flattened path) + ``meta.json`` (step, leaf manifest with per-leaf
+CRC32 checksums, data-pipeline state).  Writes are atomic (tmp dir +
+rename) so a crash mid-save never corrupts the latest checkpoint;
+``keep_last`` prunes old steps; restore accepts a target sharding pytree
+so a checkpoint taken on one mesh loads onto a different mesh shape
+(elastic resize after node loss).
+
+Restore verifies every leaf against its recorded checksum: a torn or
+bit-flipped leaf raises ``CorruptCheckpointError``, and the default
+newest-first restore *falls back to the previous step* instead of loading
+garbage — a corrupt checkpoint costs recency, never correctness.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
+import zlib
 from typing import Any
 
 import numpy as np
 
 import jax
+
+log = logging.getLogger(__name__)
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint leaf failed its CRC32 / load check."""
 
 
 def _leaf_key(path) -> str:
@@ -57,10 +71,16 @@ def save(ckpt_dir: str, step: int, tree: Any,
             # non-native dtypes (bfloat16) persist as fp32 + a dtype tag
             arr = arr.astype(np.float32)
         np.save(os.path.join(tmp, fname), arr)
-        manifest[key] = {"file": fname, "dtype": dtype}
+        manifest[key] = {"file": fname, "dtype": dtype,
+                         "crc32": zlib.crc32(
+                             np.ascontiguousarray(arr).tobytes())}
     meta = {"step": step, "manifest": manifest, "extra": extra or {}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    if os.path.exists(final):
+        # Re-save at an existing step (e.g. crash recovery converging on
+        # the same sequence number): drop the old dir so the rename lands.
+        shutil.rmtree(final, ignore_errors=True)
     os.replace(tmp, final)                  # atomic publish
 
     _prune(ckpt_dir, keep_last)
@@ -90,17 +110,14 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir: str, template: Any, step: int | None = None,
-            shardings: Any = None) -> tuple[Any, int, dict]:
-    """Load into the structure of ``template``.  ``shardings`` (optional
-    pytree of NamedSharding) re-lays the arrays onto the current mesh —
-    checkpoints are mesh-shape agnostic."""
-    step = latest_step(ckpt_dir) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+def _restore_step(ckpt_dir: str, template: Any, step: int,
+                  shardings: Any) -> tuple[Any, int, dict]:
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(d, "meta.json")) as f:
-        meta = json.load(f)
+    try:
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(f"{d}: unreadable meta.json: {e!r}")
     manifest = meta["manifest"]
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -111,7 +128,17 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None,
         key = _leaf_key(path)
         entry = manifest[key]
         fname = entry["file"] if isinstance(entry, dict) else entry
-        arr = np.load(os.path.join(d, fname))
+        try:
+            arr = np.load(os.path.join(d, fname))
+        except (OSError, ValueError) as e:       # missing or torn .npy
+            raise CorruptCheckpointError(f"{d}: leaf {key!r} unloadable: "
+                                         f"{e!r}")
+        if isinstance(entry, dict) and "crc32" in entry:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != entry["crc32"]:
+                raise CorruptCheckpointError(
+                    f"{d}: leaf {key!r} checksum mismatch "
+                    f"(got {crc:#010x}, want {entry['crc32']:#010x})")
         val = jax.numpy.asarray(arr)
         if hasattr(tmpl, "dtype"):
             val = val.astype(tmpl.dtype)
@@ -119,3 +146,31 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None,
                       else val)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, meta["step"], meta.get("extra", {})
+
+
+def restore(ckpt_dir: str, template: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int, dict]:
+    """Load into the structure of ``template``.  ``shardings`` (optional
+    pytree of NamedSharding) re-lays the arrays onto the current mesh —
+    checkpoints are mesh-shape agnostic.
+
+    With ``step=None`` (the default), tries the newest step first and
+    falls back to earlier steps if a leaf fails its CRC32 check; raises
+    ``CorruptCheckpointError`` only when *every* step is corrupt.  An
+    explicit ``step`` is loaded strictly — corruption raises."""
+    if step is not None:
+        return _restore_step(ckpt_dir, template, step, shardings)
+    steps = all_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    last_err: CorruptCheckpointError | None = None
+    for s in reversed(steps):
+        try:
+            return _restore_step(ckpt_dir, template, s, shardings)
+        except CorruptCheckpointError as e:
+            log.warning("checkpoint step %d corrupt, falling back to the "
+                        "previous step: %s", s, e)
+            last_err = e
+    raise CorruptCheckpointError(
+        f"all {len(steps)} checkpoints under {ckpt_dir} are corrupt "
+        f"(last error: {last_err})")

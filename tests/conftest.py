@@ -9,6 +9,7 @@ benches see the 1 real CPU device (the dry-run sets 512 itself).
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -63,9 +64,14 @@ def reduced_spec(arch_id: str) -> ArchSpec:
     return spec                     # gnn / cf configs are already small
 
 
+# CI's chaos step re-runs the fault suite under a seed matrix
+# (REPRO_TEST_SEED=0/1/2); every test stays deterministic per seed.
+TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
 @pytest.fixture
 def rng():
-    return np.random.default_rng(0)
+    return np.random.default_rng(TEST_SEED)
 
 
 def make_ratings(rng, n=120, m=40, density=0.3):

@@ -104,6 +104,28 @@ for u in (0, 63, 127):
         assert (miB_np[u] == n + t).sum() == 1
 print("twinsearch_sharded ok")
 
+# ---- resilient wrapper: heal poisoned rows from replicas, then the same
+# sharded scan under the serving retry policy ----
+from repro.core.twinsearch_sharded import onboard_batch_resilient
+from repro.distributed.replication import ReplicatedArena, ReplicationConfig
+from repro.serving.guard import RetryPolicy
+replicas = ReplicatedArena(state, ReplicationConfig(n_shards=8, r=2))
+sv = np.asarray(state.sim_vals).copy()
+sv[5] = np.nan                               # a dead shard's garbage row
+poisoned = state._replace(sim_vals=jnp.asarray(sv))
+with mesh:
+    healed, (vC, iC, stC) = onboard_batch_resilient(
+        poisoned, jnp.asarray(R_new), probes, s_max=s_max, axes=AX,
+        mesh=mesh, replicas=replicas,
+        retry=RetryPolicy(max_attempts=2, base_delay_s=1e-4,
+                          deadline_s=60.0, sleep=lambda s: None))
+assert replicas.repaired_rows == 1, "poison not healed"
+assert np.array_equal(np.asarray(healed.sim_vals),
+                      np.asarray(state.sim_vals)), "heal not bit-exact"
+assert np.allclose(np.asarray(vC), np.asarray(vA), atol=2e-5)
+assert np.array_equal(np.asarray(stC.found), np.asarray(stA.found))
+print("twinsearch_resilient ok")
+
 # ---- one LM + one recsys cell lower+compile on the debug mesh ----
 import dataclasses
 from repro.configs import get_arch

@@ -1,13 +1,19 @@
 """Fault-injection suite: the CF serving path under hostile conditions.
 
-Contract under test (ISSUE 7): ``CFServer`` never raises to the caller —
-capacity overflow rotates the arena, malformed requests are quarantined,
-latency spikes walk the degradation ladder, transient executor faults
-retry, and a poisoned arena (bit-flips / simulated shard loss) is detected
-and rolled back to the last good snapshot.  All faults come from the
-deterministic harness in ``repro/testing/faults.py``.
+Contract under test (ISSUE 7 + 8): ``CFServer`` never raises to the
+caller — capacity overflow rotates the arena, malformed requests are
+quarantined, latency spikes walk the degradation ladder, transient
+executor faults retry, and a poisoned arena (bit-flips / simulated shard
+loss) is healed from replicas or rolled back to the last good snapshot.
+A simulated crash at any injected crash point recovers bit-exactly via
+WAL replay over the newest checkpoint; losing any single replica keeps
+the server available while re-replication restores redundancy with zero
+similarity math.  All faults come from the deterministic harness in
+``repro/testing/faults.py``.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 import pytest
@@ -17,12 +23,19 @@ import jax.numpy as jnp
 from repro.core import rotate_arena, unsorted_rows
 from repro.core.similarity import cosine_matrix
 from repro.core.types import SENTINEL_GATE
+from repro.distributed import (ReplicaState, ReplicatedArena,
+                               ReplicationConfig)
 from repro.kernels.verify_rows.ops import arena_healthy, rows_sorted_finite
 from repro.kernels.verify_rows.ref import rows_sorted_finite_ref
-from repro.serving import CFServer, ServerStats
+from repro.serving import (CFServer, ServerStats, WriteAheadLog,
+                           LEVEL_DEGRADED, LEVEL_SHED, LEVEL_TRADITIONAL,
+                           LEVEL_TWINSEARCH)
 from repro.serving.guard import RetryPolicy
-from repro.testing import (FakeClock, Flaky, MalformedRequests,
-                           capacity_flood, inject_latency, poison_state)
+from repro.testing import (CRASH_POINTS, FakeClock, Flaky,
+                           MalformedRequests, SimulatedCrash,
+                           capacity_flood, forbid_similarity_kernels,
+                           inject_latency, install_crash, kill_replica,
+                           poison_state)
 from repro.training import checkpoint
 from repro.training.elastic import Action, StragglerMonitor
 from tests.conftest import make_ratings
@@ -201,9 +214,10 @@ class TestDegradationLadder:
         for i in range(16):
             _, info = srv.onboard_user(R[i % 40])
             assert info["status"] == "ok"
-        # two straggler verdicts: twinsearch -> traditional -> shed
+        # two straggler verdicts: twinsearch -> traditional -> shed (the
+        # latency walk skips the replica-owned ``degraded`` rung)
         assert srv.stats.degradations == 2
-        assert srv.level == 2
+        assert srv.level == LEVEL_SHED
 
         # shed: backpressure, no work, no raise
         uid, info = srv.onboard_user(R[0])
@@ -214,10 +228,10 @@ class TestDegradationLadder:
         # cooldown expiry probes traditional again, healthy streak recovers
         clock.advance(11.0)
         _, info = srv.onboard_user(R[0])
-        assert info["status"] == "ok" and srv.level == 1
+        assert info["status"] == "ok" and srv.level == LEVEL_TRADITIONAL
         for i in range(6):
             srv.onboard_user(R[i])
-        assert srv.level == 0
+        assert srv.level == LEVEL_TWINSEARCH
         assert srv.stats.recoveries == 2
 
     def test_hang_sheds_immediately(self, rng):
@@ -231,10 +245,10 @@ class TestDegradationLadder:
         inject_latency(srv, clock, [0.1] * 10 + [60.0])
         for i in range(10):
             srv.onboard_user(R[i])
-        assert srv.level == 0
+        assert srv.level == LEVEL_TWINSEARCH
         _, info = srv.onboard_user(R[10])          # hang-scale latency
         assert info["status"] == "ok"              # the call did finish...
-        assert srv.level == 2                      # ...but ABORT -> shed
+        assert srv.level == LEVEL_SHED             # ...but ABORT -> shed
 
 
 # ---------------------------------------------------------------------------
@@ -394,3 +408,439 @@ class TestSatellites:
                      "_recommend", "_predict"):
             assert hasattr(srv, attr), attr
         assert srv._cache is None                  # cache itself stays lazy
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log (unit)
+# ---------------------------------------------------------------------------
+
+class TestWriteAheadLog:
+    def test_roundtrip_bit_exact(self, tmp_path, rng):
+        wal = WriteAheadLog(str(tmp_path))
+        r = rng.normal(size=(16,)).astype(np.float32)
+        p = rng.integers(0, 40, size=4).astype(np.int32)
+        wal.append(1, "onboard", {"use_twin": True},
+                   {"ratings": r, "probes": p})
+        wal.append(2, "add_rating", {"user": 3, "item": 5, "rating": 4.0})
+        wal.append(3, "rotate")
+        wal.close()
+
+        wal2 = WriteAheadLog(str(tmp_path))        # reopen
+        recs = wal2.records()
+        assert [x.seq for x in recs] == [1, 2, 3]
+        assert [x.op for x in recs] == ["onboard", "add_rating", "rotate"]
+        np.testing.assert_array_equal(recs[0].arrays["ratings"], r)
+        np.testing.assert_array_equal(recs[0].arrays["probes"], p)
+        assert recs[0].fields == {"use_twin": True}
+        assert recs[1].fields["rating"] == 4.0
+
+    def test_torn_tail_is_repaired(self, tmp_path, rng):
+        wal = WriteAheadLog(str(tmp_path))
+        for s in range(1, 4):
+            wal.append(s, "add_rating", {"user": s, "item": 0,
+                                         "rating": 1.0})
+        wal.close()
+        # tear the tail mid-record, as a crash mid-append would
+        with open(wal.path, "r+b") as f:
+            f.truncate(wal.size_bytes() - 7)
+        wal2 = WriteAheadLog(str(tmp_path))
+        assert [x.seq for x in wal2.records()] == [1, 2]
+        wal2.append(3, "rotate")                   # appendable after repair
+        assert [x.seq for x in wal2.records()] == [1, 2, 3]
+
+    def test_truncation_policies(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        for s in range(1, 6):
+            wal.append(s, "rotate")
+        wal.truncate_through(3)                    # durable snapshot at 3
+        assert [x.seq for x in wal.records()] == [4, 5]
+        wal.truncate_after(4)                      # rollback to 4
+        assert [x.seq for x in wal.records()] == [4]
+        assert wal.truncations == 2
+
+    def test_aborted_ops_are_filtered(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        wal.append(1, "onboard", {"use_twin": False})
+        wal.append(2, "onboard", {"use_twin": False})
+        wal.append(3, "abort", {"target": 2})      # op 2 failed after log
+        wal.append(4, "rotate")
+        assert [x.seq for x in wal.records()] == [1, 4]
+
+    def test_fsync_off_still_readable(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path), fsync=False)
+        wal.append(1, "rotate")
+        assert len(WriteAheadLog(str(tmp_path)).records()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint CRC (satellite)
+# ---------------------------------------------------------------------------
+
+class TestCheckpointCRC:
+    def _tree(self, rng, shift=0.0):
+        return {"a": jnp.asarray(rng.normal(size=(8, 8)) + shift,
+                                 jnp.float32),
+                "b": jnp.asarray(np.arange(16), jnp.int32)}
+
+    def _corrupt_leaf(self, ckpt_dir, step, fname="a.npy"):
+        path = os.path.join(ckpt_dir, f"step_{step:010d}", fname)
+        with open(path, "r+b") as f:
+            f.seek(-4, os.SEEK_END)                # flip data bytes, keep
+            f.write(b"\xde\xad\xbe\xef")           # the .npy header valid
+
+    def test_corrupt_leaf_falls_back_to_previous_step(self, tmp_path, rng):
+        d = str(tmp_path)
+        t1 = self._tree(rng)
+        t2 = self._tree(rng, shift=1.0)
+        checkpoint.save(d, 1, t1)
+        checkpoint.save(d, 2, t2)
+        self._corrupt_leaf(d, 2)
+        tree, step, _ = checkpoint.restore(d, t1)
+        assert step == 1                           # newest was corrupt
+        np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                      np.asarray(t1["a"]))
+
+    def test_explicit_step_raises_on_corruption(self, tmp_path, rng):
+        d = str(tmp_path)
+        t = self._tree(rng)
+        checkpoint.save(d, 1, t)
+        self._corrupt_leaf(d, 1)
+        with pytest.raises(checkpoint.CorruptCheckpointError):
+            checkpoint.restore(d, t, step=1)
+
+    def test_all_corrupt_raises(self, tmp_path, rng):
+        d = str(tmp_path)
+        t = self._tree(rng)
+        checkpoint.save(d, 1, t)
+        checkpoint.save(d, 2, t)
+        self._corrupt_leaf(d, 1)
+        self._corrupt_leaf(d, 2)
+        with pytest.raises(checkpoint.CorruptCheckpointError):
+            checkpoint.restore(d, t)
+
+    def test_missing_leaf_file_is_corruption(self, tmp_path, rng):
+        d = str(tmp_path)
+        t = self._tree(rng)
+        checkpoint.save(d, 1, t)
+        checkpoint.save(d, 2, t)
+        os.remove(os.path.join(d, "step_0000000002", "a.npy"))
+        _, step, _ = checkpoint.restore(d, t)
+        assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# Crash + WAL recovery (tentpole): kill-and-restart is bit-exact
+# ---------------------------------------------------------------------------
+
+def _assert_states_equal(a, b):
+    for f in ("ratings", "norms", "sim_vals", "sim_idx"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"field {f} diverged")
+    assert int(a.n_active) == int(b.n_active)
+
+
+class TestCrashRecovery:
+    KNOBS = dict(capacity_extra=6, c_probes=4, snapshot_every=5,
+                 check_every=3)
+
+    def _server(self, R, tmp_path, tag, **extra):
+        return CFServer(R, wal_dir=str(tmp_path / f"{tag}-wal"),
+                        snapshot_dir=str(tmp_path / f"{tag}-snap"),
+                        **{**self.KNOBS, **extra})
+
+    def _pool(self, rng, R):
+        fresh = make_ratings(np.random.default_rng(101), n=6, m=R.shape[1])
+        # mix of twins (base copies) and fresh rows: both onboard paths
+        return np.concatenate([R[:3], fresh, R[5:8]], axis=0)
+
+    @pytest.mark.parametrize("point,nth", [
+        ("onboard.pre_wal", 4),
+        ("onboard.post_wal", 4),
+        ("onboard.post_commit", 4),
+        ("rotate.post_wal", 1),                 # fires at the 7th onboard
+    ])
+    def test_kill_and_restart_bit_exact(self, rng, tmp_path, point, nth):
+        """A crash at any injected crash point mid-sequence, recovered via
+        checkpoint + WAL replay, converges to the exact same arena as an
+        uncrashed run over the same request sequence."""
+        R = make_ratings(rng, n=40, m=16)
+        pool = self._pool(rng, R)
+        n_ops = 10                              # > capacity_extra: rotates
+
+        oracle = self._server(R, tmp_path, "oracle")
+        for i in range(n_ops):
+            _, info = oracle.onboard_user(pool[i % len(pool)])
+            assert info["status"] == "ok"
+
+        victim = self._server(R, tmp_path, "victim")
+        install_crash(victim, point, nth=nth)
+        crashed = False
+        for i in range(n_ops):
+            try:
+                victim.onboard_user(pool[i % len(pool)])
+            except SimulatedCrash as e:
+                assert e.point == point
+                crashed = True
+                break
+        assert crashed, f"crash point {point} never fired"
+
+        recovered = CFServer.recover(
+            R, wal_dir=str(tmp_path / "victim-wal"),
+            snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        # ops already applied (WAL-replayed or checkpointed) must not be
+        # re-issued; everything else is, as a client retry would
+        applied = int(recovered.state.n_active) - 40
+        for i in range(applied, n_ops):
+            _, info = recovered.onboard_user(pool[i % len(pool)])
+            assert info["status"] == "ok"
+
+        _assert_states_equal(recovered.state, oracle.state)
+        assert recovered.n_base == oracle.n_base
+        assert recovered.state.capacity == oracle.state.capacity
+        # and the recovered server keeps serving identically
+        assert recovered.recommend(5, n=5) == oracle.recommend(5, n=5)
+
+    @pytest.mark.parametrize("point,applied", [
+        ("add_rating.pre_wal", False),          # op lost: not yet logged
+        ("add_rating.post_wal", True),          # logged: replay applies it
+        ("add_rating.post_commit", True),
+    ])
+    def test_crash_around_add_rating(self, rng, tmp_path, point, applied):
+        R = make_ratings(rng, n=30, m=12)
+        oracle = self._server(R, tmp_path, "oracle")
+        for i in range(3):
+            oracle.onboard_user(R[i])
+        if applied:
+            assert oracle.add_rating(2, 3, 4.0)
+
+        victim = self._server(R, tmp_path, "victim")
+        for i in range(3):
+            victim.onboard_user(R[i])
+        install_crash(victim, point)
+        with pytest.raises(SimulatedCrash):
+            victim.add_rating(2, 3, 4.0)
+
+        recovered = CFServer.recover(
+            R, wal_dir=str(tmp_path / "victim-wal"),
+            snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        _assert_states_equal(recovered.state, oracle.state)
+
+    def test_recovery_with_wal_only(self, rng, tmp_path):
+        """No disk checkpoints at all: replay runs over a fresh build of
+        the same base ratings and still lands bit-exact."""
+        R = make_ratings(rng, n=30, m=12)
+        knobs = dict(capacity_extra=6, c_probes=4,
+                     wal_dir=str(tmp_path / "wal"))
+        srv = CFServer(R, **knobs)
+        for i in range(8):                      # crosses one rotation
+            srv.onboard_user(R[i])
+        srv.add_rating(1, 2, 3.0)
+        ref = srv.state
+
+        recovered = CFServer.recover(R, **knobs)
+        assert recovered.stats.wal_replayed == len(srv.wal.records())
+        _assert_states_equal(recovered.state, ref)
+
+    def test_aborted_onboard_not_replayed(self, rng, tmp_path):
+        """An onboard that failed after its WAL append leaves an abort
+        record; recovery must skip it."""
+        R = make_ratings(rng, n=30, m=12)
+        srv = self._server(R, tmp_path, "victim",
+                           retry=RetryPolicy(max_attempts=2,
+                                             base_delay_s=1e-4,
+                                             deadline_s=10.0,
+                                             sleep=lambda s: None))
+        srv.onboard_user(R[0])
+        srv._onboard = Flaky(srv._onboard, fail_times=99)
+        _, info = srv.onboard_user(R[1])
+        assert info["status"] == "error"
+        srv._build_jits()                       # drop the fault wrapper
+        srv.onboard_user(R[2])
+        ref = srv.state
+
+        recovered = CFServer.recover(
+            R, wal_dir=str(tmp_path / "victim-wal"),
+            snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        _assert_states_equal(recovered.state, ref)
+
+    def test_recovery_converges_after_repeated_crashes(self, rng, tmp_path):
+        """Crash -> recover -> crash again during recovery-adjacent ops:
+        the WAL + checkpoint pair is idempotent."""
+        R = make_ratings(rng, n=30, m=12)
+        srv = self._server(R, tmp_path, "victim")
+        for i in range(4):
+            srv.onboard_user(R[i])
+        for _ in range(3):                      # repeated kill-and-restart
+            srv = CFServer.recover(
+                R, wal_dir=str(tmp_path / "victim-wal"),
+                snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        oracle = self._server(R, tmp_path, "oracle")
+        for i in range(4):
+            oracle.onboard_user(R[i])
+        _assert_states_equal(srv.state, oracle.state)
+
+
+# ---------------------------------------------------------------------------
+# Replication: replica kill, failover reads, re-replication (tentpole)
+# ---------------------------------------------------------------------------
+
+class TestReplication:
+    def test_placement_chained_declustering(self):
+        cfg = ReplicationConfig(n_shards=4, r=2)
+        assert cfg.owners(0) == (0, 1)
+        assert cfg.owners(3) == (3, 0)
+        # any single node loss leaves every shard a survivor
+        for node in range(4):
+            for s in range(4):
+                assert any(n != node for n in cfg.owners(s))
+
+    @pytest.mark.parametrize("node", [0, 1, 2, 3])
+    def test_any_single_replica_down_stays_available(self, rng, node):
+        """Acceptance: with any single node down (its replicas gone AND
+        its primary shard rows garbage) the server answers identically,
+        heals from survivors, and restores r-way redundancy — all without
+        a single similarity-kernel call."""
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, c_probes=4,
+                       replication=ReplicationConfig(n_shards=4, r=2))
+        for i in range(4):
+            srv.onboard_user(R[i])
+        users = [1, 11, 21, 31, 41]
+        before = {u: srv.recommend(u, n=5) for u in users}
+
+        forbid_similarity_kernels(srv)          # recovery = data movement
+        kill_replica(srv, node)
+        assert srv.replicas.degraded()
+
+        after = {u: srv.recommend(u, n=5) for u in users}
+        assert after == before                  # correct top-n, no raise
+        assert srv.stats.repairs >= 1           # healed, not rolled back
+        assert srv.stats.rollbacks == 0
+        assert srv.replicas.redundancy() == 2   # re-replication completed
+        assert srv.replicas.rebuilt_rows > 0
+
+    def test_degraded_rung_pins_ladder_until_redundancy_restored(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, c_probes=4, recover_after=1,
+                       replication=ReplicationConfig(n_shards=4, r=2,
+                                                     rebuild_rows=5))
+        srv.onboard_user(R[0])
+        assert srv.level == LEVEL_TWINSEARCH
+        srv.replicas.kill_node(2)               # replicas only; primary ok
+        _, info = srv.onboard_user(R[1])
+        assert info["status"] == "ok"
+        assert srv.level == LEVEL_DEGRADED      # rung entered
+        assert info["level"] == "degraded"
+        assert not info["twin_found"]           # degraded = traditional path
+
+        # budgeted rebuild: a few ticks to copy 2 replicas x 12 rows
+        seen_degraded = 0
+        for _ in range(8):
+            srv.recommend(1, n=3)
+            if srv.replicas.degraded():
+                seen_degraded += 1
+        assert seen_degraded >= 2               # budget made it incremental
+        assert srv.replicas.redundancy() == 2
+        assert srv.level == LEVEL_TRADITIONAL   # rung released on restore
+        _, info = srv.onboard_user(R[2])        # healthy streak recovers
+        assert srv.level == LEVEL_TWINSEARCH
+
+    def test_unrecoverable_rows_fall_back_to_rollback(self, rng):
+        """r=1 (no redundancy): losing the only replica of a shard leaves
+        poison unrecoverable — the PR 2 rollback remains the backstop and
+        the server stays pinned degraded but available."""
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, c_probes=4, check_every=1,
+                       replication=ReplicationConfig(n_shards=4, r=1))
+        srv.onboard_user(R[0])
+        kill_replica(srv, 2)                    # poisons primary shard 2
+        _, info = srv.onboard_user(R[1])
+        assert info["status"] == "rolled_back"
+        assert srv.stats.rollbacks == 1
+        assert srv.level == LEVEL_DEGRADED      # dead replica never revives
+        _, info = srv.onboard_user(R[1])
+        assert info["status"] == "ok"           # still serving
+
+    def test_rebuilding_replica_absorbs_writes(self, rng):
+        """Writes landing mid-rebuild must not be lost: rows already
+        copied take them directly, later rows pick them up from the
+        (already-updated) source replica."""
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, c_probes=4,
+                       replication=ReplicationConfig(n_shards=4, r=2,
+                                                     rebuild_rows=3))
+        srv.replicas.kill_node(1)
+        while srv.replicas.degraded():
+            srv.add_rating(int(rng.integers(0, 40)),
+                           int(rng.integers(0, 16)), 4.0)
+        # every replica copy now mirrors the primary bit-exactly
+        for (n, s), rep in srv.replicas._replicas.items():
+            assert rep.state is ReplicaState.HEALTHY
+            sl = srv.replicas._slices[s]
+            for f in ("ratings", "norms", "sim_vals", "sim_idx"):
+                np.testing.assert_array_equal(
+                    rep.data[f], np.asarray(getattr(srv.state, f))[sl],
+                    err_msg=f"replica ({n},{s}) field {f}")
+
+    def test_replica_sweep_catches_silent_corruption(self, rng):
+        R = make_ratings(rng, n=40, m=16)
+        srv = CFServer(R, capacity_extra=8, check_every=2,
+                       replication=ReplicationConfig(n_shards=4, r=2))
+        rep = srv.replicas._replicas[(1, 1)]
+        rep.data["sim_vals"][0, 0] = np.nan     # silent replica bit-flip
+        for i in range(3):                      # check_every sweeps it
+            srv.onboard_user(R[i])
+        assert srv.replicas._replicas[(1, 1)].state is not \
+            ReplicaState.HEALTHY or srv.replicas.rebuilt_rows > 0
+        assert srv.replicas.dead_marks >= 1
+
+    def test_rotation_resets_replicas_to_new_geometry(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=4, c_probes=4,
+                       replication=ReplicationConfig(n_shards=4, r=2))
+        for i in range(6):                      # forces a rotation
+            srv.onboard_user(R[i])
+        assert srv.stats.rotations >= 1
+        assert srv.replicas.n_rows == srv.state.capacity
+        # replicas mirror the rotated arena; a kill is still recoverable
+        kill_replica(srv, 0)
+        assert srv.recommend(3, n=3)
+        assert srv.stats.rollbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Rotation hysteresis (satellite)
+# ---------------------------------------------------------------------------
+
+class TestRotationHysteresis:
+    def test_headroom_grows_write_region(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=4, c_probes=4, rotate_headroom=2.0)
+        for i in range(5):
+            srv.onboard_user(R[i])
+        assert srv.stats.rotations == 1
+        # absorbed burst k=4, headroom 2.0 -> fresh write region 8, not 4
+        assert srv.k_cap == 8
+        assert srv.state.capacity == 24 + 8
+
+    def test_headroom_reduces_rotation_count(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        flat = CFServer(R, capacity_extra=4, c_probes=4)
+        grow = CFServer(R, capacity_extra=4, c_probes=4,
+                        rotate_headroom=2.0)
+        for i in range(20):
+            flat.onboard_user(R[i % 20])
+            grow.onboard_user(R[i % 20])
+        assert grow.stats.rotations < flat.stats.rotations
+
+    def test_rotation_duration_lands_in_stats(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, capacity_extra=2, c_probes=4)
+        for i in range(5):
+            srv.onboard_user(R[i])
+        assert srv.stats.rotations >= 1
+        assert len(srv.stats.rotation_ms) == srv.stats.rotations
+        s = srv.stats.summary()
+        assert s["rotation_max_ms"] > 0.0
+        assert "rotation_p50_ms" in s

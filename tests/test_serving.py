@@ -52,6 +52,44 @@ class TestCFServer:
         assert srv.stats.rotations == 1
         assert srv.n_base == 21 and srv.state.capacity == 22
 
+    def test_double_flood_stays_bit_exact(self, rng):
+        """Flood past capacity twice (two+ rotations): every similarity
+        value must stay bitwise identical to a never-rotated server that
+        onboarded the same sequence — rotation schedules rearrange
+        values, they never recompute them.  (The oracle onboards through
+        the same twin-search path: twin-copy vs traditional recompute
+        differ by ULPs, rotation differs by nothing.)"""
+        from repro.core import rotate_arena, unsorted_rows
+        import jax.numpy as jnp
+
+        R = make_ratings(rng, n=30, m=12)
+        pool = np.concatenate(
+            [R[:4], make_ratings(np.random.default_rng(77), n=6, m=12)])
+        srv = CFServer(R, capacity_extra=4, c_probes=4)
+        oracle = CFServer(R, capacity_extra=64, c_probes=4)  # never rotates
+        for i in range(10):                      # 4-slot arena: 2 rotations
+            _, a = srv.onboard_user(pool[i % len(pool)])
+            _, b = oracle.onboard_user(pool[i % len(pool)])
+            assert a["status"] == b["status"] == "ok"
+        assert oracle.stats.rotations == 0
+        assert srv.stats.rotations >= 2
+        n_act = int(srv.state.n_active)
+        assert n_act == int(oracle.state.n_active) == 40
+
+        def full_block(s, n_base):
+            # materialise deferred symmetric entries, then recover the
+            # unsorted (n_act, n_act) all-pairs block
+            st = rotate_arena(s.state, n_base=n_base, extra=0)
+            rows = unsorted_rows(st.sim_vals, st.sim_idx,
+                                 jnp.arange(n_act, dtype=jnp.int32))
+            return np.asarray(rows)[:, :n_act]
+
+        np.testing.assert_array_equal(full_block(srv, srv.n_base),
+                                      full_block(oracle, oracle.n_base))
+        np.testing.assert_array_equal(np.asarray(srv.state.ratings[:n_act]),
+                                      np.asarray(
+                                          oracle.state.ratings[:n_act]))
+
 
 class TestDedup:
     def test_dedup_collapses_twins(self):

@@ -425,6 +425,7 @@ class CFServer:
         suffix.  Zero similarity math: the checkpoint is a byte copy and
         replay re-runs only the logged (cheap) maintenance ops."""
         restored = False
+        fell_back = False
         if self.snapshot_dir is not None:
             try:
                 tree, step, extra = checkpoint.restore(self.snapshot_dir,
@@ -441,16 +442,42 @@ class CFServer:
                 self._cache = None
                 self._build_jits()
                 restored = True
+                newest = checkpoint.latest_step(self.snapshot_dir)
+                fell_back = newest is not None and newest > step
                 log.info("restored checkpoint step %d (n_active=%d)",
                          step, int(self.state.n_active))
         if self.wal is not None:
-            records = self.wal.records(after_seq=self._seq)
-            if records and not restored and records[0].seq > 1:
+            # Gap checks run on the WAL's *raw* sequence bounds — aborted
+            # ops and their compensation records count (records() filters
+            # them out of the replay stream, but their seqs were consumed):
+            # an aborted prefix is not a missing prefix, and replaying over
+            # a genuinely missing one would silently drop committed ops.
+            first_raw = self.wal.first_seq
+            if not restored:
+                if first_raw > 1:
+                    raise RuntimeError(
+                        f"WAL starts at seq {first_raw} but no checkpoint "
+                        f"could be restored — earlier ops were truncated "
+                        f"into a checkpoint that is now missing or corrupt")
+            elif (first_raw > self._seq + 1
+                    or (fell_back and first_raw == 0)):
+                # The newest checkpoint was corrupt and the WAL was already
+                # truncated through it: the ops between the fallback step
+                # and the corrupt one are unrecoverable.  (A crash between
+                # checkpoint.save and the WAL truncation leaves the suffix
+                # intact — first_seq <= wal_seq + 1 — and recovers fine.)
                 raise RuntimeError(
-                    f"WAL starts at seq {records[0].seq} but no checkpoint "
-                    f"could be restored — earlier ops were truncated into a "
-                    f"checkpoint that is now missing or corrupt")
-            self._replay(records)
+                    f"restored checkpoint is at seq {self._seq} but the WAL "
+                    f"{'is empty' if first_raw == 0 else f'starts at seq {first_raw}'}"
+                    f" — ops since seq {self._seq} were truncated into a "
+                    f"newer checkpoint that is corrupt; refusing to replay "
+                    f"over the gap")
+            self._replay(self.wal.records(after_seq=self._seq))
+            # Resume numbering past the raw WAL tail: an aborted tail op's
+            # seq (and its abort record's) never replays, but reissuing it
+            # would make records() drop the next committed op as aborted on
+            # a later recovery.
+            self._seq = max(self._seq, self.wal.last_seq)
 
     def _replay(self, records) -> None:
         self._replaying = True

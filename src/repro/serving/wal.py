@@ -101,6 +101,17 @@ class WriteAheadLog:
     ``fsync=True`` (the default) makes each append durable before the
     operation it logs is applied; ``fsync=False`` trades the crash-window
     of one OS buffer flush for append latency.
+
+    ``first_seq``/``last_seq`` are the *raw* sequence bounds of the log —
+    they count every intact record, including aborted ops and their
+    ``abort`` compensation records that ``records()`` filters out of the
+    replay stream.  Recovery leans on that distinction twice: an aborted
+    prefix is not a *missing* prefix, and a sequence number consumed by an
+    aborted tail must never be reissued (``records()`` would drop the new
+    record as aborted on the next recovery).  ``last_seq`` rewinds to the
+    rollback point on ``truncate_after`` and is unchanged by
+    ``truncate_through`` (dropping a checkpointed prefix un-consumes
+    nothing).
     """
 
     def __init__(self, wal_dir: str, *, fsync: bool = True):
@@ -116,7 +127,7 @@ class WriteAheadLog:
                 f.flush()
                 os.fsync(f.fileno())
             _fsync_dir(wal_dir)
-        self.last_seq, self._n_records = self._repair_tail()
+        self.first_seq, self.last_seq, self._n_records = self._repair_tail()
         self._f = open(self.path, "ab")
 
     # -- scan / repair ------------------------------------------------------
@@ -146,7 +157,7 @@ class WriteAheadLog:
                 good_end = f.tell()
         return records, good_end
 
-    def _repair_tail(self) -> tuple[int, int]:
+    def _repair_tail(self) -> tuple[int, int, int]:
         records, good_end = self._scan()
         size = os.path.getsize(self.path)
         if good_end < size:
@@ -156,8 +167,9 @@ class WriteAheadLog:
                 f.truncate(good_end)
                 f.flush()
                 os.fsync(f.fileno())
+        first = records[0].seq if records else 0
         last = records[-1].seq if records else 0
-        return last, len(records)
+        return first, last, len(records)
 
     # -- append / read ------------------------------------------------------
 
@@ -169,6 +181,8 @@ class WriteAheadLog:
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+        if self._n_records == 0:
+            self.first_seq = seq
         self.last_seq = seq
         self._n_records += 1
         self.appended += 1
@@ -192,15 +206,19 @@ class WriteAheadLog:
 
     def truncate_through(self, seq: int) -> None:
         """Drop records with seq <= ``seq`` — a durable checkpoint at
-        ``seq`` has subsumed them."""
-        self._rewrite(lambda r: r.seq > seq)
+        ``seq`` has subsumed them.  ``last_seq`` is unchanged: dropping a
+        checkpointed prefix un-consumes no sequence numbers."""
+        self._rewrite(lambda r: r.seq > seq, last_seq=self.last_seq)
 
     def truncate_after(self, seq: int) -> None:
         """Drop records with seq > ``seq`` — a rollback discarded their
-        effects."""
-        self._rewrite(lambda r: r.seq <= seq)
+        effects.  ``last_seq`` rewinds to ``seq`` (even when every record
+        is dropped) so the discarded sequence numbers are reissued, in
+        lockstep with the server's own counter."""
+        self._rewrite(lambda r: r.seq <= seq,
+                      last_seq=min(self.last_seq, seq))
 
-    def _rewrite(self, keep) -> None:
+    def _rewrite(self, keep, *, last_seq: int) -> None:
         recs, _ = self._scan()
         kept = [r for r in recs if keep(r)]
         tmp = self.path + ".tmp"
@@ -217,7 +235,8 @@ class WriteAheadLog:
         _fsync_dir(self.dir)
         self._f = open(self.path, "ab")
         self._n_records = len(kept)
-        self.last_seq = kept[-1].seq if kept else max(self.last_seq, 0)
+        self.first_seq = kept[0].seq if kept else 0
+        self.last_seq = last_seq
         self.truncations += 1
 
     def close(self) -> None:

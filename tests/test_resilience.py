@@ -471,6 +471,42 @@ class TestWriteAheadLog:
         wal.append(1, "rotate")
         assert len(WriteAheadLog(str(tmp_path)).records()) == 1
 
+    def test_raw_bounds_include_aborts(self, tmp_path):
+        """first_seq/last_seq are raw bounds: aborted ops and their
+        compensation records consumed sequence numbers even though
+        records() filters them from the replay stream."""
+        wal = WriteAheadLog(str(tmp_path))
+        assert (wal.first_seq, wal.last_seq) == (0, 0)
+        wal.append(1, "onboard", {"use_twin": False})
+        wal.append(2, "abort", {"target": 1})
+        assert (wal.first_seq, wal.last_seq) == (1, 2)
+        wal.close()
+        wal2 = WriteAheadLog(str(tmp_path))        # bounds survive reopen
+        assert (wal2.first_seq, wal2.last_seq) == (1, 2)
+        assert wal2.records() == []                # yet nothing replays
+
+    def test_truncate_after_rewinds_last_seq(self, tmp_path):
+        """Rollback truncation rewinds last_seq to the rollback point so
+        discarded seqs are reissued — even when every record is dropped."""
+        wal = WriteAheadLog(str(tmp_path))
+        for s in range(1, 6):
+            wal.append(s, "rotate")
+        wal.truncate_after(2)
+        assert wal.last_seq == 2
+        wal.truncate_after(0)                      # drops every record
+        assert (wal.first_seq, wal.last_seq) == (0, 0)
+
+    def test_truncate_through_keeps_last_seq(self, tmp_path):
+        """Checkpoint truncation un-consumes nothing: last_seq holds even
+        when the log empties, so numbering never restarts over old seqs."""
+        wal = WriteAheadLog(str(tmp_path))
+        for s in range(1, 4):
+            wal.append(s, "rotate")
+        wal.truncate_through(3)                    # empties the log
+        assert (wal.first_seq, wal.last_seq) == (0, 3)
+        wal.append(4, "rotate")
+        assert (wal.first_seq, wal.last_seq) == (4, 4)
+
 
 # ---------------------------------------------------------------------------
 # Checkpoint CRC (satellite)
@@ -663,6 +699,88 @@ class TestCrashRecovery:
             R, wal_dir=str(tmp_path / "victim-wal"),
             snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
         _assert_states_equal(recovered.state, ref)
+
+    _FAST_RETRY = dict(max_attempts=2, base_delay_s=1e-4, deadline_s=10.0,
+                       sleep=lambda s: None)
+
+    def test_aborted_tail_never_reuses_seqs(self, rng, tmp_path):
+        """Crash right after an onboard aborts: the WAL tail is the abort
+        record.  Recovery must resume numbering past it — reissuing the
+        aborted seq would make records() drop the next committed op as
+        aborted on a later recovery, silently losing an acked mutation."""
+        R = make_ratings(rng, n=30, m=12)
+        srv = self._server(R, tmp_path, "victim",
+                           retry=RetryPolicy(**self._FAST_RETRY))
+        srv.onboard_user(R[0])
+        srv._onboard = Flaky(srv._onboard, fail_times=99)
+        _, info = srv.onboard_user(R[1])
+        assert info["status"] == "error"            # WAL tail = abort
+
+        r1 = CFServer.recover(
+            R, wal_dir=str(tmp_path / "victim-wal"),
+            snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        assert r1._seq >= r1.wal.last_seq           # numbering moved past it
+        _, info = r1.onboard_user(R[2])             # committed + acked
+        assert info["status"] == "ok"
+        ref = r1.state
+
+        r2 = CFServer.recover(                      # second kill-and-restart
+            R, wal_dir=str(tmp_path / "victim-wal"),
+            snapshot_dir=str(tmp_path / "victim-snap"), **self.KNOBS)
+        _assert_states_equal(r2.state, ref)
+
+    def test_wal_only_recovery_with_aborted_first_op(self, rng, tmp_path):
+        """No checkpoints + the first logged op aborted: recovery must not
+        mistake the abort-filtered prefix for a truncated one."""
+        R = make_ratings(rng, n=30, m=12)
+        knobs = dict(capacity_extra=6, c_probes=4,
+                     wal_dir=str(tmp_path / "wal"))
+        srv = CFServer(R, retry=RetryPolicy(**self._FAST_RETRY), **knobs)
+        srv._onboard = Flaky(srv._onboard, fail_times=99)
+        _, info = srv.onboard_user(R[0])
+        assert info["status"] == "error"            # seq 1 aborted
+        srv._build_jits()                           # drop the fault wrapper
+        srv.onboard_user(R[1])
+        ref = srv.state
+
+        recovered = CFServer.recover(R, **knobs)    # must not raise
+        _assert_states_equal(recovered.state, ref)
+
+    @pytest.mark.parametrize("snapshot_every,wal_empty", [
+        (2, True),      # WAL truncated through the corrupt newest step
+        (4, False),     # WAL holds a suffix, but past the gap
+    ])
+    def test_fallback_over_truncated_wal_fails_loudly(self, rng, tmp_path,
+                                                      snapshot_every,
+                                                      wal_empty):
+        """Newest checkpoint corrupt after the WAL was truncated through
+        it: the ops between the fallback step and the corrupt one are
+        unrecoverable, and recovery must raise instead of silently
+        replaying over the gap (JAX's clamped indexing would corrupt rows
+        without a trace)."""
+        R = make_ratings(rng, n=30, m=12)
+        srv = self._server(R, tmp_path, "victim",
+                           snapshot_every=snapshot_every)
+        for i in range(6):
+            _, info = srv.onboard_user(R[i])
+            assert info["status"] == "ok"
+        assert (len(srv.wal.records()) == 0) == wal_empty
+
+        snap = tmp_path / "victim-snap"
+        steps = checkpoint.all_steps(str(snap))
+        assert len(steps) >= 2
+        step_dir = snap / f"step_{steps[-1]:010d}"
+        leaf = next(p for p in sorted(step_dir.iterdir())
+                    if p.suffix == ".npy")
+        with open(leaf, "r+b") as f:                # flip data bytes, keep
+            f.seek(-4, os.SEEK_END)                 # the .npy header valid
+            f.write(b"\xde\xad\xbe\xef")
+
+        with pytest.raises(RuntimeError, match="gap|truncated"):
+            CFServer.recover(
+                R, wal_dir=str(tmp_path / "victim-wal"),
+                snapshot_dir=str(tmp_path / "victim-snap"),
+                **{**self.KNOBS, "snapshot_every": snapshot_every})
 
     def test_recovery_converges_after_repeated_crashes(self, rng, tmp_path):
         """Crash -> recover -> crash again during recovery-adjacent ops:

@@ -1,11 +1,14 @@
 """Durability-layer throughput: what crash recovery and replica loss cost.
 
-Four questions, answered in wall time:
+Five questions, answered in wall time:
 
   * **wal**: append cost per mutating op, with and without fsync — the
     per-request durability tax;
-  * **replay**: WAL replay time per logged onboard on restart — how long
-    a crash actually costs, vs the traditional rebuild it replaces;
+  * **group_commit**: one fsync per batch vs one per record on
+    ``onboard_batch`` — how much of the fsync tax coalescing recovers;
+  * **replay**: WAL replay time per logged onboard on restart, serial
+    (``replay_batch=1``) vs batched (``replay_batch=16``) — how long a
+    crash actually costs, vs the traditional rebuild it replaces;
   * **rereplicate**: background re-replication throughput (rows/s of pure
     host-side copy) — how fast r-way redundancy comes back after a node
     loss;
@@ -22,7 +25,7 @@ import numpy as np
 
 from benchmarks.common import CSV
 from repro.distributed.replication import ReplicatedArena, ReplicationConfig
-from repro.serving import CFServer
+from repro.serving import CFServer, ServerConfig, SnapshotConfig, WalConfig
 from repro.testing import poison_state
 
 
@@ -43,19 +46,22 @@ def _median(fn, repeats=5):
     return ts[len(ts) // 2]
 
 
+_NO_SNAP = SnapshotConfig(every=10**9, check_every=10**9)
+
+
 def main(csv: CSV) -> None:
     rng = np.random.default_rng(0)
     n, m, extra = 1000, 100, 64
-    n_ops = 32
+    n_ops = 256
     R = _ratings(rng, n, m)
 
     # -- WAL append cost, fsync on/off -----------------------------------
     for fsync in (True, False):
         d = tempfile.mkdtemp(prefix="walbench-")
         try:
-            srv = CFServer(R, capacity_extra=extra, c_probes=8,
-                           wal_dir=d, wal_fsync=fsync,
-                           snapshot_every=10**9, check_every=10**9)
+            srv = CFServer(R, ServerConfig(
+                capacity_extra=extra, c_probes=8, snapshot=_NO_SNAP,
+                wal=WalConfig(dir=d, fsync=fsync)))
             row = R[rng.integers(0, n)]
             srv.onboard_user(row)                     # compile
             t = _median(lambda: srv.onboard_user(row), repeats=10)
@@ -66,31 +72,66 @@ def main(csv: CSV) -> None:
         finally:
             shutil.rmtree(d, ignore_errors=True)
 
-    # -- replay throughput on recovery -----------------------------------
+    # -- group commit: fsyncs per onboard_batch --------------------------
+    batch = np.stack([R[rng.integers(0, n)] for _ in range(8)])
+    for gc in (True, False):
+        d = tempfile.mkdtemp(prefix="walbench-")
+        try:
+            srv = CFServer(R, ServerConfig(
+                capacity_extra=extra, c_probes=8, snapshot=_NO_SNAP,
+                wal=WalConfig(dir=d, group_commit=gc)))
+            srv.onboard_user(batch[0])                # compile
+            s0, repeats = srv.wal.syncs, 3
+            t = _median(lambda: srv.onboard_batch(batch), repeats=repeats)
+            syncs = (srv.wal.syncs - s0) // repeats
+            csv.add(f"wal/batch8_group_commit_{int(gc)}", t,
+                    f"{syncs} fsyncs per 8-row batch")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    # -- replay throughput on recovery: serial vs batched ----------------
     wal_d = tempfile.mkdtemp(prefix="walbench-")
     snap_d = tempfile.mkdtemp(prefix="snapbench-")
     try:
-        srv = CFServer(R, capacity_extra=extra, c_probes=8, wal_dir=wal_d,
-                       snapshot_dir=snap_d, snapshot_every=10**9,
-                       check_every=10**9)
+        # buffer sized past n_ops: keep the log free of rotate records so
+        # the serial-vs-batched comparison is pure onboard replay
+        base = dict(capacity_extra=n_ops + 8, c_probes=8,
+                    snapshot=SnapshotConfig(every=10**9, check_every=10**9,
+                                            dir=snap_d))
+        srv = CFServer(R, ServerConfig(wal=WalConfig(dir=wal_d), **base))
         for _ in range(n_ops):
             srv.onboard_user(R[rng.integers(0, n)])
-        t0 = time.perf_counter()
-        rec = CFServer.recover(R, capacity_extra=extra, c_probes=8,
-                               wal_dir=wal_d, snapshot_dir=snap_d,
-                               snapshot_every=10**9, check_every=10**9)
-        dt = time.perf_counter() - t0
-        assert rec.stats.wal_replayed == n_ops
-        csv.add("replay/per_onboard", dt / n_ops,
-                f"{n_ops} ops, total {dt * 1e3:.0f}ms incl. restore")
+        t_serial = None
+        for b in (1, 16):
+            # recovery snapshots + truncates on success; replay each
+            # variant from its own copy of the crashed dirs
+            w = shutil.copytree(wal_d, tempfile.mkdtemp() + "/wal")
+            s = shutil.copytree(snap_d, tempfile.mkdtemp() + "/snap")
+            cfg = ServerConfig(
+                capacity_extra=n_ops + 8, c_probes=8,
+                snapshot=SnapshotConfig(every=10**9, check_every=10**9,
+                                        dir=s),
+                wal=WalConfig(dir=w, replay_batch=b))
+            t0 = time.perf_counter()
+            rec = CFServer.recover(R, cfg)
+            dt = time.perf_counter() - t0
+            assert rec.stats.wal_replayed == n_ops
+            note = f"{n_ops} ops, total {dt * 1e3:.0f}ms incl. restore"
+            if b == 1:
+                t_serial = dt
+            else:
+                note += f", serial/batched={t_serial / dt:.2f}x"
+            csv.add(f"replay/per_onboard_batch{b}", dt / n_ops, note)
+            shutil.rmtree(w, ignore_errors=True)
+            shutil.rmtree(s, ignore_errors=True)
     finally:
         shutil.rmtree(wal_d, ignore_errors=True)
         shutil.rmtree(snap_d, ignore_errors=True)
 
     # -- re-replication throughput (pure data movement) ------------------
-    srv = CFServer(R, capacity_extra=extra, c_probes=8,
-                   snapshot_every=10**9, check_every=10**9,
-                   replication=ReplicationConfig(n_shards=8, r=2))
+    srv = CFServer(R, ServerConfig(
+        capacity_extra=extra, c_probes=8, snapshot=_NO_SNAP,
+        replication=ReplicationConfig(n_shards=8, r=2)))
     reps: ReplicatedArena = srv.replicas
     rows_per_kill = 2 * ((n + extra) // 8)            # 2 replicas per node
 

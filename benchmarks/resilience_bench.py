@@ -1,6 +1,6 @@
 """Resilience-layer overhead: what fault tolerance costs the hot path.
 
-Three questions, answered in wall time:
+Four questions, answered in wall time:
 
   * **guard**: per-request validation cost on ``onboard_user`` /
     ``add_rating`` — the tax every well-formed request pays;
@@ -9,6 +9,10 @@ Three questions, answered in wall time:
     active set.  Rotation trades the rebuild's O(n^2 m) similarity
     recompute for O(n L log L) sorts, so its advantage grows with the
     item count m; at the small m benchmarked here the two are close;
+  * **pause**: the worst single-onboard stall under a sustained flood,
+    synchronous rotation vs incremental (``budget_rows`` slices drained
+    on each onboard, atomic swap at the end) — the latency the
+    background plan buys back;
   * **health**: the ``arena_healthy`` invariant sweep + an in-memory
     snapshot — the per-``check_every`` cost of poison detection.
 """
@@ -23,7 +27,8 @@ import jax.numpy as jnp
 from benchmarks.common import CSV, time_call
 from repro.core import build_state, rotate_arena
 from repro.kernels.verify_rows.ops import arena_healthy
-from repro.serving import CFServer
+from repro.serving import (CFServer, RotationConfig, ServerConfig,
+                           SnapshotConfig)
 from repro.serving.guard import validate_ratings_vector
 
 
@@ -44,6 +49,9 @@ def _median(fn, repeats=5):
     return ts[len(ts) // 2]
 
 
+_NO_SNAP = SnapshotConfig(every=10**9, check_every=10**9)
+
+
 def main(csv: CSV) -> None:
     rng = np.random.default_rng(0)
     n, m, extra = 2000, 200, 64
@@ -55,14 +63,14 @@ def main(csv: CSV) -> None:
         r, n_items=m, rating_range=(1.0, 5.0)), repeats=50)
     csv.add("guard/validate_vector", t, f"m={m}")
 
-    srv = CFServer(R, capacity_extra=extra, c_probes=8)
+    srv = CFServer(R, ServerConfig(capacity_extra=extra, c_probes=8))
     t = _median(lambda: srv.add_rating(5, 3, 4.0), repeats=20)
     csv.add("guard/add_rating_guarded", t, "incl. cache update")
 
     # -- rotation vs fresh build over the same active set ----------------
     for k in (16, 64):
-        srv = CFServer(R, capacity_extra=k, c_probes=8,
-                       snapshot_every=10**9, check_every=10**9)
+        srv = CFServer(R, ServerConfig(capacity_extra=k, c_probes=8,
+                                       snapshot=_NO_SNAP))
         for i in range(k):
             srv.onboard_user(R[rng.integers(0, n)])
         st = srv.state
@@ -76,6 +84,28 @@ def main(csv: CSV) -> None:
             active)
         csv.add(f"rotation/fresh_build_k{k}", t_fresh,
                 f"fresh/rotate={t_fresh / t_rot:.2f}x")
+
+    # -- worst onboard stall under flood: sync vs incremental rotation ---
+    k = 16
+    flood = [R[rng.integers(0, n)] for _ in range(3 * k + 2)]
+    pause_sync = None
+    for name, rot in (("sync", RotationConfig()),
+                      ("incremental", RotationConfig(budget_rows=256,
+                                                     reserve_slots=12))):
+        fs = CFServer(R, ServerConfig(capacity_extra=k, c_probes=8,
+                                      snapshot=_NO_SNAP, rotation=rot))
+        for row in flood:
+            fs.onboard_user(row)
+        s = fs.stats.summary()
+        assert s["rotations"] >= 2, name
+        pause = s["rotation_pause_max_ms"] / 1e3
+        note = (f"{s['rotations']} rotations over {len(flood)} onboards, "
+                f"forced_drains={s['forced_drains']}")
+        if name == "sync":
+            pause_sync = pause
+        else:
+            note += f", sync/incremental={pause_sync / pause:.2f}x"
+        csv.add(f"rotation/pause_{name}", pause, note)
 
     # -- health check + snapshot cadence cost ----------------------------
     st = srv.state

@@ -7,9 +7,11 @@
   maintenance_bench  burst-batched k-way merge-insert vs k sequential
                      inserts (bit-exactness asserted), k in {1,5,10,20,30}
   resilience_bench   fault-tolerance overhead: request-guard tax, arena
-                     rotation vs fresh rebuild, health-check + snapshot
-  recovery_bench     durability throughput: WAL append/replay cost,
-                     re-replication rows/s, replica repair
+                     rotation vs fresh rebuild, sync-vs-incremental
+                     rotation pause, health-check + snapshot
+  recovery_bench     durability throughput: WAL append/group-commit cost,
+                     serial vs batched replay, re-replication rows/s,
+                     replica repair
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full-scale
 cells come from ``python -m repro.launch.dryrun --all`` +

@@ -10,19 +10,19 @@ Run:  PYTHONPATH=src python examples/knn_attack_demo.py
 import numpy as np
 
 from repro.data import plant_twins, synth_ratings
-from repro.serving import CFServer
+from repro.serving import CFServer, ServerConfig
 
 
 def main() -> None:
     R = synth_ratings(0, 1500, 600, 60_000)
-    srv = CFServer(R, capacity_extra=64, c_probes=8)
+    srv = CFServer(R, ServerConfig(capacity_extra=64, c_probes=8))
 
     print("== attacker injects k=30 identical fake users")
     attack = plant_twins(R, 30, source_user=None, seed=13)
     twin_flags = []
     for i in range(30):
-        _, info = srv.onboard_user(attack[i])
-        twin_flags.append(info["twin_found"])
+        res = srv.onboard_user(attack[i])
+        twin_flags.append(res.twin_found)
 
     s = srv.stats.summary()
     print(f"   onboarding cost: {s['fallbacks']} full build(s) + "

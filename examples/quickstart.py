@@ -11,21 +11,21 @@ import time
 import numpy as np
 
 from repro.data import movielens_100k, plant_twins
-from repro.serving import CFServer
+from repro.serving import CFServer, ServerConfig
 
 def main() -> None:
     print("== building MovieLens-scale CF system (943 users x 1682 films)")
     R = movielens_100k(seed=0)
     t0 = time.perf_counter()
-    srv = CFServer(R, capacity_extra=32, c_probes=8)
+    srv = CFServer(R, ServerConfig(capacity_extra=32, c_probes=8))
     print(f"   full similarity build: {time.perf_counter() - t0:.2f}s")
 
     print("== kNN-attack burst: 10 identical new users (>=8 ratings)")
     burst = plant_twins(R, 10, source_user=None, seed=7)
     for i in range(10):
-        uid, info = srv.onboard_user(burst[i])
-        path = "TwinSearch copy" if info["twin_found"] else "full build"
-        print(f"   user {uid}: {path:15s} {info['ms']:7.1f}ms")
+        res = srv.onboard_user(burst[i])
+        path = "TwinSearch copy" if res.twin_found else "full build"
+        print(f"   user {res.user_id}: {path:15s} {res.latency_ms:7.1f}ms")
     s = srv.stats.summary()
     print(f"   twin hits: {s['twin_hits']}/10, fallbacks {s['fallbacks']}, "
           f"p50 {s['onboard_p50_ms']:.1f}ms")
@@ -36,7 +36,7 @@ def main() -> None:
           [f"#{i}({s:.2f})" for i, s in recs])
 
     print("== baseline comparison: same burst, traditional path only")
-    srv2 = CFServer(R, capacity_extra=32)
+    srv2 = CFServer(R, ServerConfig(capacity_extra=32))
     for i in range(10):
         srv2.onboard_user(burst[i], use_twinsearch=False)
     med = lambda xs: sorted(xs)[len(xs) // 2]            # noqa: E731

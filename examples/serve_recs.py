@@ -9,14 +9,15 @@ import time
 import numpy as np
 
 from repro.data import synth_ratings
-from repro.serving import CFServer
+from repro.serving import CFServer, RotationConfig, ServerConfig
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
     R = synth_ratings(0, 2000, 800, 90_000)
     print("== boot: 2000-user, 800-item system")
-    srv = CFServer(R, capacity_extra=64, c_probes=8)
+    srv = CFServer(R, ServerConfig(capacity_extra=64, c_probes=8,
+                                   rotation=RotationConfig(budget_rows=256)))
 
     print("== mixed request stream (200 requests)")
     t0 = time.perf_counter()
@@ -28,7 +29,8 @@ def main() -> None:
             src = onboard_pool[srv.stats.onboarded % len(onboard_pool)]
             row = (R[src] if src is not None else
                    synth_ratings(100 + i, 1, 800, 40)[0])
-            srv.onboard_user(row)
+            res = srv.onboard_user(row)
+            assert res.ok and res.rung == "twinsearch"
         elif kind < 0.3:
             srv.add_rating(int(rng.integers(0, 2000)),
                            int(rng.integers(0, 800)),

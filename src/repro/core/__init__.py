@@ -18,7 +18,8 @@ from repro.core.maintenance import (insert_into_lists,
                                     insert_batch_into_lists,
                                     merge_new_users_into_base, splice_twin,
                                     splice_twins, twin_sims_block)
-from repro.core.rotation import rotate_arena, unsorted_rows
+from repro.core.rotation import (RotationPlan, rotate_arena,
+                                 rotate_arena_frozen, unsorted_rows)
 
 __all__ = [
     "CFState", "OnboardStats", "TwinResult", "SENTINEL", "SENTINEL_GATE",
@@ -30,5 +31,6 @@ __all__ = [
     "onboard_batch", "make_probes", "probe_sims", "candidate_mask",
     "verify_candidates", "insert_into_lists", "insert_batch_into_lists",
     "merge_new_users_into_base", "splice_twin", "splice_twins",
-    "twin_sims_block", "rotate_arena", "unsorted_rows",
+    "twin_sims_block", "RotationPlan", "rotate_arena",
+    "rotate_arena_frozen", "unsorted_rows",
 ]

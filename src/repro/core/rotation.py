@@ -31,10 +31,32 @@ tolerance (stored sims came from ``cosine_vs_all``; a fresh build's
 Rows refreshed mid-epoch by ``add_rating`` re-sort over the *current*
 active set and may therefore already contain write-region entries; rotation
 gates those out before the merge so no row ends up with duplicates.
+
+Two execution modes share the same per-row ops (so they are bit-exact by
+construction):
+
+  * ``rotate_arena`` — the one-shot synchronous rotation: compact the
+    whole write region ``[n_base, n_active)`` now;
+  * ``RotationPlan`` — the chunked, resumable rotation: freeze the burst
+    boundary at plan start, merge base rows in bounded slices
+    (``step(state, budget_rows)``) while new onboards keep landing past
+    the frozen boundary, then ``finalize(state)`` performs the atomic
+    swap.  Rows onboarded mid-plan are *carried* into the new write
+    region unchanged (onboarding only ever writes the new user's own
+    row); base rows refreshed mid-plan by ``add_rating`` are re-merged at
+    finalize from the live state, and a refresh of a frozen burst row
+    invalidates the recovered block and restarts the (idempotent)
+    precompute.  ``finalize`` is therefore bit-identical to the one-shot
+    ``rotate_arena_frozen`` applied to the live state at swap time —
+    which is what crash recovery replays from the WAL's ``rotate_commit``
+    record.
 """
 from __future__ import annotations
 
 import math
+from functools import partial
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +96,117 @@ def _fit_width(vals: jax.Array, idx: jax.Array,
     return vals[:, cur - width:], idx[:, cur - width:]
 
 
+# ---------------------------------------------------------------------------
+# Shared per-row ops — every rotation mode goes through these, so chunked
+# and one-shot results are bit-identical (pure data movement, row-local).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_base", "use_pallas"))
+def _merge_base_rows(sim_vals: jax.Array, sim_idx: jax.Array, U: jax.Array,
+                     rows: jax.Array, buf_ids: jax.Array, *, n_base: int,
+                     use_pallas: bool | None) -> tuple[jax.Array, jax.Array]:
+    """Gate + stable re-sort + k-way merge for the base rows ``rows``.
+
+    ``rows`` is (b,) int32 ids in [0, n_base); duplicates (chunk padding)
+    compute redundantly and are discarded by the caller.  Returns the
+    merged ascending (b, L + k) lists.  Row-local: processing rows in any
+    grouping yields bitwise-identical rows."""
+    gv_raw = sim_vals[rows]
+    gi_raw = sim_idx[rows]
+    # Gate out any write-region entries (rows refreshed by add_rating
+    # already carry them), stable re-sort so the gated lists are ascending
+    # again, then merge the whole burst in one pass.
+    gate = gi_raw < n_base
+    gv = jnp.where(gate, gv_raw, SENTINEL)
+    gi = jnp.where(gate, gi_raw, -1)
+    order = jnp.argsort(gv, axis=1, stable=True)
+    gv = jnp.take_along_axis(gv, order, axis=1)
+    gi = jnp.take_along_axis(gi, order, axis=1)
+    mv, mi = merge_new_users_into_base(gv, gi, U[:, rows], buf_ids,
+                                       use_pallas=use_pallas)
+    return mv, mi.astype(jnp.int32)
+
+
+def _burst_rows(U: jax.Array, *, n_base: int, n_frozen: int,
+                n_new: int) -> tuple[jax.Array, jax.Array]:
+    """Full-width sorted lists for the compacted burst rows.
+
+    Base entries come straight from the recovered block; burst-internal
+    entries complete by symmetry (row u_t holds sim(u_t, u_s) only for
+    s < t — the transpose holds the rest); the self-entry a fresh build
+    would carry is exactly 1."""
+    k = n_frozen - n_base
+    C = U[:, n_base:n_frozen]                            # (k, k)
+    C = jnp.where(C > SENTINEL_GATE, C, jnp.swapaxes(C, 0, 1))
+    C = C.at[jnp.arange(k), jnp.arange(k)].set(1.0)
+    W = jnp.full((k, n_new), SENTINEL, jnp.float32)
+    W = W.at[:, :n_base].set(U[:, :n_base].astype(jnp.float32))
+    W = W.at[:, n_base:n_frozen].set(C.astype(jnp.float32))
+    bi = jnp.argsort(W, axis=1, stable=True).astype(jnp.int32)
+    bv = jnp.take_along_axis(W, bi, axis=1)
+    return bv, bi
+
+
+def rotate_arena_frozen(state: CFState, *, n_base: int, n_frozen: int,
+                        extra: int,
+                        use_pallas: bool | None = None) -> CFState:
+    """Compact the frozen burst ``[n_base, n_frozen)`` into a new base
+    arena of capacity ``n_active + extra``; rows ``[n_frozen, n_active)``
+    (onboarded after the boundary froze) are *carried* into the new write
+    region with their lists re-fit to the new width — valid because
+    onboarding only ever writes the new user's own row, so a carried
+    row's list is exactly what onboarding into the new arena would have
+    produced.  ``n_frozen == n_active`` reproduces the classic full
+    rotation.  This is also the deterministic replay of a WAL
+    ``rotate_commit`` record."""
+    n_act = int(state.n_active)
+    k = n_frozen - n_base
+    n_new = n_act + extra
+    m = state.n_items
+    grow = n_new - n_act
+
+    ratings = jnp.concatenate([
+        state.ratings[:n_act],
+        jnp.zeros((grow, m), state.ratings.dtype)], axis=0)
+    norms = jnp.concatenate([
+        state.norms[:n_act], jnp.zeros((grow,), state.norms.dtype)])
+
+    if k == 0:                               # pure growth, nothing to merge
+        base_v, base_i = _fit_width(state.sim_vals[:n_frozen],
+                                    state.sim_idx[:n_frozen], n_new)
+    else:
+        buf = jnp.arange(n_base, n_frozen, dtype=jnp.int32)
+        U = unsorted_rows(state.sim_vals, state.sim_idx, buf)    # (k, N)
+        mv, mi = _merge_base_rows(state.sim_vals, state.sim_idx, U,
+                                  jnp.arange(n_base, dtype=jnp.int32), buf,
+                                  n_base=n_base, use_pallas=use_pallas)
+        mv, mi = _fit_width(mv, mi, n_new)
+        bv, bi = _burst_rows(U, n_base=n_base, n_frozen=n_frozen,
+                             n_new=n_new)
+        base_v = jnp.concatenate([mv.astype(jnp.float32), bv], axis=0)
+        base_i = jnp.concatenate([mi, bi], axis=0)
+
+    blocks_v, blocks_i = [base_v], [base_i]
+    if n_act > n_frozen:                     # carried mid-plan onboards
+        cv, ci = _fit_width(state.sim_vals[n_frozen:n_act],
+                            state.sim_idx[n_frozen:n_act], n_new)
+        blocks_v.append(cv.astype(jnp.float32))
+        blocks_i.append(ci)
+
+    # Fresh write region: all-sentinel rows with identity permutations
+    # (what ``build_state`` gives inactive slots).
+    empty_v = jnp.full((grow, n_new), SENTINEL, jnp.float32)
+    empty_i = jnp.broadcast_to(jnp.arange(n_new, dtype=jnp.int32),
+                               (grow, n_new))
+    return CFState(
+        ratings=ratings,
+        norms=norms,
+        sim_vals=jnp.concatenate(blocks_v + [empty_v], axis=0),
+        sim_idx=jnp.concatenate(blocks_i + [empty_i], axis=0),
+        n_active=jnp.asarray(n_act, jnp.int32),
+    )
+
+
 def rotate_arena(state: CFState, *, n_base: int, extra: int,
                  headroom: float = 1.0,
                  use_pallas: bool | None = None) -> CFState:
@@ -91,59 +224,186 @@ def rotate_arena(state: CFState, *, n_base: int, extra: int,
     n_act = int(state.n_active)
     k = n_act - n_base
     extra = max(int(extra), int(math.ceil(float(headroom) * k)))
-    n_new = n_act + extra
-    m = state.n_items
+    return rotate_arena_frozen(state, n_base=n_base, n_frozen=n_act,
+                               extra=extra, use_pallas=use_pallas)
 
-    ratings = jnp.concatenate([
-        state.ratings[:n_act],
-        jnp.zeros((extra, m), state.ratings.dtype)], axis=0)
-    norms = jnp.concatenate([
-        state.norms[:n_act], jnp.zeros((extra,), state.norms.dtype)])
 
-    if k == 0:                               # pure growth, nothing to merge
-        base_v, base_i = _fit_width(state.sim_vals[:n_act],
-                                    state.sim_idx[:n_act], n_new)
-    else:
-        buf = jnp.arange(n_base, n_act, dtype=jnp.int32)
-        U = unsorted_rows(state.sim_vals, state.sim_idx, buf)    # (k, N)
+class RotationPlan:
+    """Chunked, resumable arena rotation with a frozen burst boundary.
 
-        # Base rows: gate out any write-region entries (rows refreshed by
-        # add_rating already carry them), stable re-sort so the gated lists
-        # are ascending again, then merge the whole burst in one pass.
-        gate = state.sim_idx[:n_base] < n_base
-        gv = jnp.where(gate, state.sim_vals[:n_base], SENTINEL)
-        gi = jnp.where(gate, state.sim_idx[:n_base], -1)
-        order = jnp.argsort(gv, axis=1, stable=True)
-        gv = jnp.take_along_axis(gv, order, axis=1)
-        gi = jnp.take_along_axis(gi, order, axis=1)
-        mv, mi = merge_new_users_into_base(
-            gv, gi, U[:, :n_base], buf, use_pallas=use_pallas)
-        mv, mi = _fit_width(mv, mi.astype(jnp.int32), n_new)
+    Created when the server decides to rotate *ahead* of exhaustion; the
+    expensive part — gating + merging every base row — runs in bounded
+    slices (``step``) interleaved with live traffic, and the cheap
+    remainder (burst-row construction, carried rows, concatenation) runs
+    once at ``finalize``.  The plan is pure precompute: it never mutates
+    the state it reads, a crash mid-plan loses nothing (nothing is logged
+    until the swap commits), and its output is bit-identical to
+    ``rotate_arena_frozen(live_state, ...)`` at swap time.
 
-        # Burst rows: base entries come straight from the recovered block;
-        # burst-internal entries complete by symmetry (row u_t holds
-        # sim(u_t, u_s) only for s < t — the transpose holds the rest);
-        # the self-entry a fresh build would carry is exactly 1.
-        C = U[:, n_base:n_act]                               # (k, k)
-        C = jnp.where(C > SENTINEL_GATE, C, jnp.swapaxes(C, 0, 1))
-        C = C.at[jnp.arange(k), jnp.arange(k)].set(1.0)
-        W = jnp.full((k, n_new), SENTINEL, jnp.float32)
-        W = W.at[:, :n_base].set(U[:, :n_base].astype(jnp.float32))
-        W = W.at[:, n_base:n_act].set(C.astype(jnp.float32))
-        bi = jnp.argsort(W, axis=1, stable=True).astype(jnp.int32)
-        bv = jnp.take_along_axis(W, bi, axis=1)
-        base_v = jnp.concatenate([mv.astype(jnp.float32), bv], axis=0)
-        base_i = jnp.concatenate([mi, bi], axis=0)
+    Live mutations are reconciled through ``note_write``:
 
-    # Fresh write region: all-sentinel rows with identity permutations
-    # (what ``build_state`` gives inactive slots).
-    empty_v = jnp.full((extra, n_new), SENTINEL, jnp.float32)
-    empty_i = jnp.broadcast_to(jnp.arange(n_new, dtype=jnp.int32),
-                               (extra, n_new))
-    return CFState(
-        ratings=ratings,
-        norms=norms,
-        sim_vals=jnp.concatenate([base_v, empty_v], axis=0),
-        sim_idx=jnp.concatenate([base_i, empty_i], axis=0),
-        n_active=jnp.asarray(n_act, jnp.int32),
-    )
+      * a base row refreshed by ``add_rating`` is marked dirty and
+        re-merged from the live state before the swap;
+      * a *frozen burst* row refreshed invalidates the recovered U block —
+        the precompute restarts from the live state (same boundary);
+      * rows at or past ``n_frozen`` (mid-plan onboards) need nothing —
+        ``finalize`` carries them straight from the live state.
+    """
+
+    def __init__(self, state: CFState, *, n_base: int, extra: int,
+                 chunk_rows: int = 64, use_pallas: bool | None = None):
+        self.n_base = int(n_base)
+        self.n_frozen = int(state.n_active)
+        self.k = self.n_frozen - self.n_base
+        self.extra = int(extra)
+        self.chunk = max(1, int(chunk_rows))
+        self.use_pallas = use_pallas
+        self.restarts = 0
+        self.elapsed_ms = 0.0        # accumulated step+finalize time
+        self._buf = jnp.arange(self.n_base, self.n_frozen, dtype=jnp.int32)
+        self._U: jax.Array | None = None
+        self._mv: np.ndarray | None = None       # (n_base, L + k) host accum
+        self._mi: np.ndarray | None = None
+        self._cursor = 0
+        self._dirty: set[int] = set()
+        self._stale = self.k > 0     # U snapshot pending (or invalidated)
+
+    # -- progress -----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        """True when every base row is merged against the current U block
+        and no dirty rows are pending — the swap would be O(burst+concat)."""
+        if self.k == 0:
+            return True
+        return (not self._stale and self._cursor >= self.n_base
+                and not self._dirty)
+
+    @property
+    def remaining_rows(self) -> int:
+        if self.k == 0:
+            return 0
+        if self._stale:
+            return self.n_base + len(self._dirty)
+        return (self.n_base - self._cursor) + len(self._dirty)
+
+    # -- live-mutation reconciliation ---------------------------------------
+
+    def note_write(self, row: int) -> None:
+        """Record that ``row``'s list/ratings were rewritten (add_rating)."""
+        r = int(row)
+        if r < self.n_base:
+            if not self._stale:      # a pending refreeze re-reads everything
+                self._dirty.add(r)
+        elif r < self.n_frozen:
+            # The recovered block holds this burst row's scattered list;
+            # it is now stale.  Restart the precompute from the live state.
+            if not self._stale:
+                self._stale = True
+                self.restarts += 1
+
+    # -- bounded work -------------------------------------------------------
+
+    def _refreeze(self, state: CFState) -> None:
+        self._U = unsorted_rows(state.sim_vals, state.sim_idx, self._buf)
+        L = state.sim_vals.shape[1]
+        self._mv = np.empty((self.n_base, L + self.k), np.float32)
+        self._mi = np.empty((self.n_base, L + self.k), np.int32)
+        self._cursor = 0
+        self._dirty.clear()
+        self._stale = False
+
+    def _run_rows(self, state: CFState, rows: np.ndarray) -> None:
+        """One fixed-shape merge dispatch over ``rows`` (padded by
+        repetition to the chunk width; pad lanes recompute a row already
+        done — harmless, row-local, discarded by the scatter)."""
+        n = rows.shape[0]
+        if n < self.chunk:
+            rows = np.concatenate(
+                [rows, np.full(self.chunk - n, rows[-1], rows.dtype)])
+        mv, mi = _merge_base_rows(state.sim_vals, state.sim_idx, self._U,
+                                  jnp.asarray(rows, jnp.int32), self._buf,
+                                  n_base=self.n_base,
+                                  use_pallas=self.use_pallas)
+        self._mv[rows[:n]] = np.asarray(mv)[:n]
+        self._mi[rows[:n]] = np.asarray(mi)[:n]
+
+    def step(self, state: CFState, budget_rows: int) -> int:
+        """Merge up to ``budget_rows`` base rows against the frozen block;
+        returns the number of rows actually processed.  Never mutates
+        ``state``; safe to call at any point between server mutations."""
+        if self.k == 0 or self.done:
+            return 0
+        import time
+        t0 = time.perf_counter()
+        if self._stale:
+            self._refreeze(state)
+        budget = max(1, int(budget_rows))
+        processed = 0
+        while processed < budget and self._cursor < self.n_base:
+            hi = min(self._cursor + self.chunk, self.n_base)
+            self._run_rows(state, np.arange(self._cursor, hi))
+            processed += hi - self._cursor
+            self._cursor = hi
+        # Main sweep finished: re-merge rows dirtied since they were done.
+        while processed < budget and self._cursor >= self.n_base \
+                and self._dirty:
+            batch = sorted(self._dirty)[:self.chunk]
+            self._run_rows(state, np.asarray(batch))
+            self._dirty.difference_update(batch)
+            processed += len(batch)
+        self.elapsed_ms += (time.perf_counter() - t0) * 1e3
+        return processed
+
+    # -- the atomic swap ----------------------------------------------------
+
+    def finalize(self, state: CFState) -> CFState:
+        """Produce the rotated state from the live ``state``: drain any
+        remaining/dirty rows, build the burst + carried blocks, and
+        assemble the new arena.  Bit-identical to
+        ``rotate_arena_frozen(state, n_base=.., n_frozen=.., extra=..)``."""
+        while not self.done:                     # force-drain the tail
+            self.step(state, self.n_base)
+        import time
+        t0 = time.perf_counter()
+        n_act = int(state.n_active)
+        n_new = n_act + self.extra
+        m = state.n_items
+        grow = n_new - n_act
+
+        ratings = jnp.concatenate([
+            state.ratings[:n_act],
+            jnp.zeros((grow, m), state.ratings.dtype)], axis=0)
+        norms = jnp.concatenate([
+            state.norms[:n_act], jnp.zeros((grow,), state.norms.dtype)])
+
+        if self.k == 0:
+            base_v, base_i = _fit_width(state.sim_vals[:self.n_frozen],
+                                        state.sim_idx[:self.n_frozen], n_new)
+        else:
+            mv, mi = _fit_width(jnp.asarray(self._mv),
+                                jnp.asarray(self._mi), n_new)
+            bv, bi = _burst_rows(self._U, n_base=self.n_base,
+                                 n_frozen=self.n_frozen, n_new=n_new)
+            base_v = jnp.concatenate([mv.astype(jnp.float32), bv], axis=0)
+            base_i = jnp.concatenate([mi, bi], axis=0)
+
+        blocks_v, blocks_i = [base_v], [base_i]
+        if n_act > self.n_frozen:
+            cv, ci = _fit_width(state.sim_vals[self.n_frozen:n_act],
+                                state.sim_idx[self.n_frozen:n_act], n_new)
+            blocks_v.append(cv.astype(jnp.float32))
+            blocks_i.append(ci)
+
+        empty_v = jnp.full((grow, n_new), SENTINEL, jnp.float32)
+        empty_i = jnp.broadcast_to(jnp.arange(n_new, dtype=jnp.int32),
+                                   (grow, n_new))
+        out = CFState(
+            ratings=ratings,
+            norms=norms,
+            sim_vals=jnp.concatenate(blocks_v + [empty_v], axis=0),
+            sim_idx=jnp.concatenate(blocks_i + [empty_i], axis=0),
+            n_active=jnp.asarray(n_act, jnp.int32),
+        )
+        self.elapsed_ms += (time.perf_counter() - t0) * 1e3
+        return out

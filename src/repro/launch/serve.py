@@ -16,15 +16,16 @@ log = logging.getLogger("repro.launch.serve")
 
 def serve_cf(args) -> None:
     from repro.data import plant_twins, synth_ratings
-    from repro.serving import CFServer
+    from repro.serving import CFServer, ServerConfig
     R = synth_ratings(0, args.users, args.items, args.users * 45)
-    srv = CFServer(R, capacity_extra=args.capacity, c_probes=args.probes)
+    srv = CFServer(R, ServerConfig(capacity_extra=args.capacity,
+                                   c_probes=args.probes))
     log.info("CF service up: %d users, %d items", args.users, args.items)
     burst = plant_twins(R, 8, source_user=3)
     for i in range(8):
-        uid, info = srv.onboard_user(burst[i])
-        log.info("onboard %d twin=%s %.1fms", uid, info["twin_found"],
-                 info["ms"])
+        res = srv.onboard_user(burst[i])
+        log.info("onboard %d twin=%s %.1fms", res.user_id, res.twin_found,
+                 res.latency_ms)
     log.info("stats: %s", srv.stats.summary())
 
 

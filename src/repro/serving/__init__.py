@@ -1,14 +1,33 @@
-from repro.serving.cf_server import (CFServer, ServerStats,
+"""Public serving surface.
+
+``__all__`` here is the supported API — ``tests/test_api_surface.py``
+snapshots it (and the ``ServerConfig``/``OnboardResult`` field sets) so
+the surface can only change deliberately.
+"""
+from repro.distributed.replication import ReplicationConfig
+from repro.serving.cf_server import (CFServer, OnboardResult, ServerStats,
                                      LEVEL_DEGRADED, LEVEL_SHED,
                                      LEVEL_TRADITIONAL, LEVEL_TWINSEARCH)
+from repro.serving.config import (LadderConfig, RotationConfig,
+                                  ServerConfig, SnapshotConfig, WalConfig)
 from repro.serving.dedup import DedupPlan, dedup_batch, fan_out, prompt_hash
 from repro.serving.guard import (Quarantine, Rejection, RetryPolicy,
                                  call_with_retry)
 from repro.serving.lm_server import LMServer
 from repro.serving.wal import WalRecord, WriteAheadLog
 
-__all__ = ["CFServer", "ServerStats", "DedupPlan", "dedup_batch", "fan_out",
-           "prompt_hash", "LMServer", "Quarantine", "Rejection",
-           "RetryPolicy", "call_with_retry", "LEVEL_TWINSEARCH",
-           "LEVEL_TRADITIONAL", "LEVEL_DEGRADED", "LEVEL_SHED",
-           "WalRecord", "WriteAheadLog"]
+__all__ = [
+    # server + results
+    "CFServer", "OnboardResult", "ServerStats",
+    # configuration
+    "ServerConfig", "SnapshotConfig", "WalConfig", "RotationConfig",
+    "LadderConfig", "ReplicationConfig",
+    # degradation ladder levels
+    "LEVEL_TWINSEARCH", "LEVEL_TRADITIONAL", "LEVEL_DEGRADED", "LEVEL_SHED",
+    # request guard
+    "Quarantine", "Rejection", "RetryPolicy", "call_with_retry",
+    # durability
+    "WalRecord", "WriteAheadLog",
+    # LM-serving utilities
+    "DedupPlan", "dedup_batch", "fan_out", "prompt_hash", "LMServer",
+]

@@ -4,11 +4,31 @@ new-user onboarding fast path, hardened for bursty production traffic.
 Request surface (what a real deployment fronts with an RPC layer):
 
   * ``onboard_user(ratings)``   — TwinSearch -> copy, or traditional build
-                                  fallback; returns the new user id + info.
+                                  fallback; returns a typed
+                                  ``OnboardResult`` (legacy
+                                  ``(uid, info)`` unpacking still works).
+  * ``onboard_batch(batch)``    — a sequence of onboards under one WAL
+                                  group commit (one fsync per batch).
   * ``recommend(user, n)``      — top-n unseen items via kNN scores.
   * ``predict(user, item)``     — kNN weighted-average rating.
   * ``add_rating(user, item, r)``— incremental (Papagelis-style) update of
                                   the affected similarity row.
+  * ``step_maintenance()``      — drain a slice of any pending incremental
+                                  rotation during quiet periods.
+
+Configuration is a frozen ``serving.ServerConfig`` (sub-configs:
+``SnapshotConfig`` / ``WalConfig`` / ``RotationConfig`` / ``LadderConfig``);
+the historical flat kwargs still work via a deprecation shim.
+
+With ``RotationConfig.budget_rows > 0`` arena rotation is *incremental*:
+a ``RotationPlan`` starts when free write slots fall to ``reserve_slots``
+and merges at most ``budget_rows`` base rows per onboard/tick (plus retry
+backoff waits and shed backpressure windows), while new users keep
+landing in the buffer past the frozen boundary; the final atomic swap is
+bit-identical to the synchronous rotation of the live state and is the
+only part a request ever waits for (``ServerStats.rotation_pause_ms``).
+The swap is WAL-logged as ``rotate_commit`` (frozen boundary + growth),
+so recovery replays it deterministically via ``rotate_arena_frozen``.
 
 Resilience contract: **no public entrypoint raises to the caller.**
 
@@ -65,8 +85,12 @@ visibility the benchmarks read.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import logging
+import math
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -79,10 +103,12 @@ from repro.core import (CFState, build_state, knn, set0_cap)
 from repro.core import baseline as base_lib
 from repro.core import twinsearch as ts
 from repro.core import update as upd_lib
-from repro.core.rotation import rotate_arena
+from repro.core.rotation import (RotationPlan, rotate_arena,
+                                 rotate_arena_frozen)
 from repro.distributed.replication import ReplicatedArena, ReplicationConfig
 from repro.kernels.verify_rows.ops import arena_healthy
 from repro.serving import guard
+from repro.serving.config import ServerConfig
 from repro.serving.wal import WriteAheadLog
 from repro.training import checkpoint
 from repro.training.elastic import Action, StragglerMonitor
@@ -118,15 +144,21 @@ class ServerStats:
     recoveries: int = 0
     wal_appends: int = 0
     wal_replayed: int = 0
+    plan_restarts: int = 0      # incremental-rotation precompute restarts
+    forced_drains: int = 0      # buffer filled before the plan finished
     latency_window: int = 1024
     onboard_ms: deque = field(init=False)
     rotation_ms: deque = field(init=False)
+    rotation_pause_ms: deque = field(init=False)
 
     def __post_init__(self) -> None:
         # Fixed-size ring buffers: sustained traffic must not grow host
         # memory; summary() percentiles are over the trailing window.
         self.onboard_ms = deque(maxlen=self.latency_window)
         self.rotation_ms = deque(maxlen=64)
+        # What rotation actually cost a *single request*: the synchronous
+        # stall (full rotation, or just the final swap when incremental).
+        self.rotation_pause_ms = deque(maxlen=64)
 
     def summary(self) -> dict:
         ms = sorted(self.onboard_ms) or [0.0]
@@ -148,75 +180,152 @@ class ServerStats:
             "recoveries": self.recoveries,
             "wal_appends": self.wal_appends,
             "wal_replayed": self.wal_replayed,
+            "plan_restarts": self.plan_restarts,
+            "forced_drains": self.forced_drains,
             "onboard_p50_ms": ms[len(ms) // 2],
             "onboard_p99_ms": ms[min(len(ms) - 1, int(len(ms) * 0.99))],
             "rotation_p50_ms": rot[len(rot) // 2],
             "rotation_max_ms": rot[-1],
+            "rotation_pause_max_ms": max(self.rotation_pause_ms, default=0.0),
         }
 
 
+# Legacy dict-key -> OnboardResult attribute (identity for the rest).
+_RESULT_KEY_MAP = {"ms": "latency_ms", "level": "rung"}
+
+
+@dataclass(frozen=True)
+class OnboardResult:
+    """Typed outcome of ``onboard_user`` / ``onboard_batch``.
+
+    Replaces the historical ``(user_id, info_dict)`` tuple.  For migration
+    the old shapes still work: iterating yields ``(user_id, result)`` so
+    ``uid, info = srv.onboard_user(r)`` unpacks as before, and
+    ``result["ms"]`` / ``result["level"]`` / ``result.get(...)`` resolve
+    through the legacy key names (``ms`` -> ``latency_ms``, ``level`` ->
+    ``rung``).
+    """
+    user_id: int = -1
+    status: str = "ok"        # ok|rejected|shed|error|rolled_back
+    rung: str = "twinsearch"  # ladder level the request was served at
+    latency_ms: float = 0.0
+    rotated: bool = False     # this request triggered/absorbed a rotation
+    seq: int = -1             # WAL sequence number (-1: nothing logged)
+    twin_found: bool = False
+    reason: str | None = None
+    detail: str | None = None
+    retry_after_s: float | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    # -- legacy (user_id, info_dict) compatibility --------------------------
+
+    def __iter__(self):
+        yield self.user_id
+        yield self
+
+    def __getitem__(self, key):
+        if isinstance(key, int):
+            return (self.user_id, self)[key]
+        try:
+            return getattr(self, _RESULT_KEY_MAP.get(key, key))
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def get(self, key, default=None):
+        try:
+            val = self[key]
+        except KeyError:
+            return default
+        return default if val is None else val
+
+    def __contains__(self, key) -> bool:
+        try:
+            return self[key] is not None
+        except KeyError:
+            return False
+
+
 class CFServer:
-    def __init__(self, ratings: np.ndarray, *, capacity_extra: int = 64,
-                 c_probes: int = 8, sim_tol: float = 1e-6,
-                 measure: str = "cosine", seed: int = 0,
-                 rating_range: tuple[float, float] = (1.0, 5.0),
-                 quarantine_capacity: int = 256,
-                 latency_window: int = 1024,
-                 retry: guard.RetryPolicy | None = None,
-                 monitor: StragglerMonitor | None = None,
-                 recover_after: int = 32,
-                 shed_cooldown_s: float = 1.0,
-                 snapshot_every: int = 64,
-                 snapshot_dir: str | None = None,
-                 snapshot_keep: int = 3,
-                 check_every: int = 8,
-                 rotate_headroom: float = 1.0,
-                 wal_dir: str | None = None,
-                 wal_fsync: bool = True,
-                 replication: ReplicationConfig | None = None,
-                 recover: bool = False):
+    def __init__(self, ratings: np.ndarray,
+                 config: ServerConfig | None = None, *,
+                 recover: bool = False, **legacy):
+        """``CFServer(ratings, config=ServerConfig(...))`` is the surface;
+        the historical flat kwargs (``capacity_extra=..., wal_dir=...``)
+        still work through a shim that round-trips them into a
+        ``ServerConfig`` and emits a ``DeprecationWarning``."""
+        if config is not None and legacy:
+            raise ValueError(
+                "pass either config=ServerConfig(...) or the legacy flat "
+                f"kwargs, not both (got legacy keys {sorted(legacy)})")
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    "CFServer's flat keyword arguments are deprecated; "
+                    "pass config=ServerConfig(...) (see "
+                    "repro.serving.config, ServerConfig.from_kwargs maps "
+                    "the old names)", DeprecationWarning, stacklevel=2)
+            config = ServerConfig.from_kwargs(**legacy)
+        self.config = config
+        self._rcfg = config.rotation
+        self._wcfg = config.wal
+        self._lcfg = config.ladder
+
         self.n_base = int(ratings.shape[0])
-        self.k_cap = int(capacity_extra)
-        self.c = c_probes
-        self.tol = sim_tol
-        self.rating_range = (float(rating_range[0]), float(rating_range[1]))
-        self.rotate_headroom = float(rotate_headroom)
+        self.k_cap = int(config.capacity_extra)
+        self.c = config.c_probes
+        self.tol = config.sim_tol
+        self.rating_range = (float(config.rating_range[0]),
+                             float(config.rating_range[1]))
+        self.rotate_headroom = float(config.rotation.headroom)
         self.state: CFState = jax.jit(
-            lambda R: build_state(R, capacity_extra=capacity_extra,
-                                  measure=measure))(jnp.asarray(
+            lambda R: build_state(R, capacity_extra=config.capacity_extra,
+                                  measure=config.measure))(jnp.asarray(
                                       ratings, jnp.float32))
-        self._key = jax.random.PRNGKey(seed)
-        self.stats = ServerStats(latency_window=latency_window)
-        self.quarantine = guard.Quarantine(capacity=quarantine_capacity)
+        self._key = jax.random.PRNGKey(config.seed)
+        self.stats = ServerStats(latency_window=config.latency_window)
+        self.quarantine = guard.Quarantine(
+            capacity=config.quarantine_capacity)
 
         # Degradation ladder + retry machinery.  The monitor's clock is the
         # server's time source for shed cooldowns too, so fault-injection
-        # tests drive the whole ladder in virtual time.
-        self.retry = retry or guard.RetryPolicy()
-        self.monitor = monitor or StragglerMonitor(
+        # tests drive the whole ladder in virtual time.  Retry backoff
+        # waits double as maintenance ticks: time spent blocked on a
+        # transient fault drains the rotation plan instead of idling.
+        self.retry = config.ladder.retry or guard.RetryPolicy()
+        if self.retry.on_wait is None:
+            self.retry = dataclasses.replace(
+                self.retry, on_wait=self._drain_during_wait)
+        self.monitor = config.ladder.monitor or StragglerMonitor(
             window=64, straggler_ratio=4.0, hang_timeout_s=30.0,
             consecutive_to_shrink=3)
         self._clock = self.monitor.clock
         self.level = LEVEL_TWINSEARCH
-        self.recover_after = int(recover_after)
-        self.shed_cooldown_s = float(shed_cooldown_s)
+        self.recover_after = int(config.ladder.recover_after)
+        self.shed_cooldown_s = float(config.ladder.shed_cooldown_s)
         self._healthy_streak = 0
         self._shed_until = 0.0
 
         # Snapshot / rollback machinery.
-        self.snapshot_every = int(snapshot_every)
-        self.snapshot_dir = snapshot_dir
-        self.snapshot_keep = int(snapshot_keep)
-        self.check_every = int(check_every)
+        self.snapshot_every = int(config.snapshot.every)
+        self.snapshot_dir = config.snapshot.dir
+        self.snapshot_keep = int(config.snapshot.keep)
+        self.check_every = int(config.snapshot.check_every)
         self._since_snapshot = 0
         self._since_check = 0
+
+        # Incremental rotation: a pending chunked plan (None = no rotation
+        # in flight; always None when rotation.budget_rows == 0).
+        self._plan: RotationPlan | None = None
 
         # Durability machinery.  ``_seq`` is the monotonic mutation counter:
         # it numbers WAL records AND disk checkpoints, so "checkpoint at S
         # plus WAL records with seq > S" is always the current state.
         self._seq = 0
-        self.wal = (WriteAheadLog(wal_dir, fsync=wal_fsync)
-                    if wal_dir is not None else None)
+        self.wal = (WriteAheadLog(config.wal.dir, fsync=config.wal.fsync)
+                    if config.wal.dir is not None else None)
         self._replaying = False
         self._crash_hook = None        # test seam: see testing/faults.py
         self.replicas: ReplicatedArena | None = None
@@ -231,22 +340,23 @@ class CFServer:
         if recover:
             self._recover_state()
 
-        if replication is not None:
-            self.replicas = ReplicatedArena(self.state, replication)
+        if config.replication is not None:
+            self.replicas = ReplicatedArena(self.state, config.replication)
 
         self._snapshot = None
         self._take_snapshot()            # the construction-time good state
 
     @classmethod
-    def recover(cls, ratings: np.ndarray, **kwargs) -> "CFServer":
+    def recover(cls, ratings: np.ndarray,
+                config: ServerConfig | None = None,
+                **kwargs) -> "CFServer":
         """Rebuild a server after a crash: restore the newest durable
-        checkpoint under ``snapshot_dir`` (falling back past corrupt
-        steps), then replay the WAL suffix under ``wal_dir`` through the
-        same jitted ops — the recovered arena is bit-identical to the
-        pre-crash one, with zero similarity recompute.  Pass the same
-        construction knobs as the original server."""
-        kwargs["recover"] = True
-        return cls(ratings, **kwargs)
+        checkpoint under the snapshot dir (falling back past corrupt
+        steps), then replay the WAL suffix through the same jitted ops —
+        the recovered arena is bit-identical to the pre-crash one, with
+        zero similarity recompute.  Pass the same construction config as
+        the original server."""
+        return cls(ratings, config, recover=True, **kwargs)
 
     # -- internal machinery -------------------------------------------------
 
@@ -267,6 +377,57 @@ class CFServer:
         self._init_cache = jax.jit(upd_lib.init_cache)
         self._add = jax.jit(upd_lib.add_rating)
         self._healthy = arena_healthy
+
+        # Batched WAL replay: one jitted dispatch per chunk of B records
+        # instead of one per record — a lax.scan over the *same* per-step
+        # ops the serial path runs, so the replayed state stays
+        # bit-identical; only dispatch overhead is amortised.  Twin and
+        # traditional records get separate specialised scans: replay
+        # compiles exactly the paths the log exercises (a mixed cond body
+        # would pay both compiles even for a pure-twin log).  Chunk size
+        # is baked into the traced shapes; runs shorter than B fall back
+        # to the per-record path.
+        s_max, tol = self.s_max, self.tol
+
+        def _twin_chunk(st, Rb, Pb):
+            def body(s, inp):
+                r0, probes = inp
+                s2, res = ts.onboard_twinsearch(
+                    s, r0, probes, s_max=s_max, n_base=n_base,
+                    k_cap=k_cap, tol=tol)
+                return s2, (jnp.asarray(res.found, jnp.bool_),
+                            jnp.asarray(res.overflowed, jnp.bool_))
+
+            st, (founds, overs) = jax.lax.scan(body, st, (Rb, Pb))
+            return st, founds, overs
+
+        self._replay_twin_chunk = jax.jit(_twin_chunk)
+
+        def _trad_chunk(st, Rb):
+            def body(s, r0):
+                return base_lib.onboard_traditional(s, r0), None
+
+            st, _ = jax.lax.scan(body, st, Rb)
+            return st
+
+        self._replay_trad_chunk = jax.jit(_trad_chunk)
+
+        def _chunk_add(st, cache, users, items, vals):
+            def body(carry, inp):
+                s, c = carry
+                u, i, v = inp
+                s, c = upd_lib.add_rating(s, c, u, i, v)
+                return (s, c), None
+
+            (st, cache), _ = jax.lax.scan(body, (st, cache),
+                                          (users, items, vals))
+            return st, cache
+
+        self._replay_add_chunk = jax.jit(_chunk_add)
+        # key_{i+1} = split(key_i)[0], n times in one dispatch — the same
+        # chain the live path walks one split per twin-search onboard
+        self._advance_key = jax.jit(lambda key, m: jax.lax.fori_loop(
+            0, m, lambda _, k: jax.random.split(k)[0], key))
 
     def _reject(self, kind: str, reason: str, payload=None,
                 detail: str = "") -> dict:
@@ -364,10 +525,120 @@ class CFServer:
         self._build_jits()
         self.stats.rotations += 1
         self.stats.rotation_ms.append(dt_ms)
+        # Synchronous rotation: the triggering request stalls for all of it.
+        self.stats.rotation_pause_ms.append(dt_ms)
         if self.replicas is not None:
             self.replicas.reset(self.state)
         log.info("arena rotated: capacity %d -> %d (n_base=%d, %.1fms)",
                  old_capacity, self.state.capacity, self.n_base, dt_ms)
+
+    # -- incremental rotation (rotation.budget_rows > 0) --------------------
+
+    def _free_slots(self) -> int:
+        return self.state.capacity - int(self.state.n_active)
+
+    def _reserve_slots(self) -> int:
+        r = self._rcfg.reserve_slots
+        return int(r) if r is not None else max(1, self.k_cap // 4)
+
+    def _start_plan(self) -> None:
+        k0 = int(self.state.n_active) - self.n_base
+        extra = max(self.k_cap,
+                    int(math.ceil(self.rotate_headroom * self.k_cap)))
+        self._plan = RotationPlan(self.state, n_base=self.n_base,
+                                  extra=extra,
+                                  chunk_rows=max(1, self._rcfg.budget_rows))
+        log.info("incremental rotation started: n_base=%d burst=%d "
+                 "extra=%d", self.n_base, k0, extra)
+
+    def _maintenance_tick(self, budget_rows: int | None = None) -> None:
+        """Advance background rotation by one bounded slice and swap when
+        the plan completes.  Called at safe points only — between mutating
+        ops, never inside one (the in-flight op's closures captured the
+        pre-swap state)."""
+        if self._rcfg.budget_rows <= 0:
+            return
+        if self._plan is None:
+            if self.k_cap <= 0 or self._free_slots() > self._reserve_slots():
+                return
+            self._start_plan()
+        budget = (int(budget_rows) if budget_rows is not None
+                  else self._rcfg.budget_rows)
+        if not self._plan.done:
+            self._plan.step(self.state, budget)
+            self._crashpoint("rotation.step")
+        if self._plan.done:
+            self._swap_rotation()
+
+    def _drain_during_wait(self, delay_s: float) -> None:
+        """Retry-backoff hook: spend otherwise-idle wait time on rotation
+        *chunks*.  Never swaps — a retry is mid-onboard and the pending
+        ``run`` closure captured the pre-swap state."""
+        if (self._plan is not None and not self._plan.done
+                and self._rcfg.budget_rows > 0):
+            self._plan.step(self.state, self._rcfg.budget_rows)
+
+    def _force_drain(self) -> None:
+        """The buffer filled before the plan finished (or before it even
+        started): finish the rotation now, synchronously.  Degrades to
+        exactly the old stall in the worst case — never worse."""
+        if self._plan is None:
+            self._start_plan()
+        else:
+            self.stats.forced_drains += 1
+        while not self._plan.done:
+            self._plan.step(self.state, max(1, self.n_base))
+        self._swap_rotation()
+
+    def _swap_rotation(self) -> None:
+        """The atomic swap: log ``rotate_commit``, finalize the plan from
+        the live state (bit-identical to ``rotate_arena_frozen``), and
+        retarget geometry.  The WAL record carries the frozen boundary so
+        recovery replays the swap deterministically at the same point in
+        the op stream."""
+        plan = self._plan
+        old_capacity = self.state.capacity
+        t0 = time.perf_counter()
+        self._log("rotate_commit", fields={"n_base": plan.n_base,
+                                           "n_frozen": plan.n_frozen,
+                                           "extra": plan.extra})
+        self._crashpoint("rotation.commit_post_wal")
+        new_state = plan.finalize(self.state)
+        new_state.sim_vals.block_until_ready()
+        pause_ms = (time.perf_counter() - t0) * 1e3
+        self._install_rotated(new_state, n_base=plan.n_frozen)
+        self._plan = None
+        self.stats.rotations += 1
+        self.stats.rotation_ms.append(plan.elapsed_ms)
+        self.stats.rotation_pause_ms.append(pause_ms)
+        self.stats.plan_restarts += plan.restarts
+        self._crashpoint("rotation.post_swap")
+        log.info("arena rotated (incremental): capacity %d -> %d "
+                 "(n_base=%d, %.1fms total, %.1fms pause)", old_capacity,
+                 self.state.capacity, self.n_base, plan.elapsed_ms,
+                 pause_ms)
+
+    def _install_rotated(self, new_state: CFState, *, n_base: int) -> None:
+        """Point the server at a rotated arena (live swap or WAL replay)."""
+        self.state = new_state
+        self.n_base = int(n_base)
+        self.k_cap = self.state.capacity - self.n_base
+        self._cache = None
+        self._build_jits()
+        if self.replicas is not None:
+            self.replicas.reset(self.state)
+
+    def step_maintenance(self, budget_rows: int | None = None) -> dict:
+        """Public maintenance tick: drain up to ``budget_rows`` rows of any
+        pending incremental rotation (defaults to the configured
+        per-onboard budget).  Wire this into idle-period hooks — e.g. the
+        ladder's ``StragglerMonitor`` quiet windows — so rotations finish
+        between bursts instead of inside them."""
+        self._maintenance_tick(budget_rows)
+        plan = self._plan
+        return {"active": plan is not None,
+                "remaining_rows": plan.remaining_rows if plan else 0,
+                "free_slots": self._free_slots()}
 
     # -- durability: WAL / snapshot / rollback / recovery -------------------
 
@@ -408,6 +679,7 @@ class CFServer:
         self.k_cap = state.capacity - n_base
         self._seq = seq
         self._cache = None
+        self._plan = None          # precomputed against the discarded state
         if geometry_changed:
             self._build_jits()
         if self.wal is not None:
@@ -480,12 +752,36 @@ class CFServer:
             self._seq = max(self._seq, self.wal.last_seq)
 
     def _replay(self, records) -> None:
+        """Replay a WAL suffix.  With ``wal.replay_batch > 1`` maximal
+        contiguous runs of same-op, same-path ``onboard``/``add_rating``
+        records are driven through one specialised jitted scan per full
+        chunk (same per-step ops — bit-identical state, one dispatch
+        instead of B); short runs and run tails take the per-record path.
+        ``rotate`` / ``rotate_commit`` records break runs: they change
+        arena geometry."""
+        records = list(records)
+        B = max(1, int(self._wcfg.replay_batch))
         self._replaying = True
         try:
-            for rec in records:
+            i = 0
+            while i < len(records):
+                rec = records[i]
+                if B > 1 and rec.op in ("onboard", "add_rating"):
+                    j = i
+                    while j < len(records) and records[j].op == rec.op:
+                        j += 1
+                    run = records[i:j]
+                    if rec.op == "onboard":
+                        self._replay_onboard_run(run, B)
+                    else:
+                        self._replay_add_rating_run(run, B)
+                    i = j
+                    continue
                 self._seq = rec.seq
                 if rec.op == "rotate":
                     self._rotate()
+                elif rec.op == "rotate_commit":
+                    self._replay_rotate_commit(rec)
                 elif rec.op == "onboard":
                     self._replay_onboard(rec)
                 elif rec.op == "add_rating":
@@ -494,8 +790,98 @@ class CFServer:
                     log.warning("unknown WAL op %r at seq %d skipped",
                                 rec.op, rec.seq)
                 self.stats.wal_replayed += 1
+                i += 1
         finally:
             self._replaying = False
+
+    def _replay_rotate_commit(self, rec) -> None:
+        """Deterministic replay of an incremental rotation's atomic swap:
+        the record pins the frozen boundary and growth, so
+        ``rotate_arena_frozen`` reproduces the swapped arena bit-exactly
+        at the same point in the op stream."""
+        f = rec.fields
+        new_state = rotate_arena_frozen(
+            self.state, n_base=int(f["n_base"]),
+            n_frozen=int(f["n_frozen"]), extra=int(f["extra"]))
+        new_state.sim_vals.block_until_ready()
+        self._install_rotated(new_state, n_base=int(f["n_frozen"]))
+        self.stats.rotations += 1
+
+    def _replay_onboard_run(self, run, B: int) -> None:
+        # maximal same-path sub-runs, so each chunk hits one specialised jit
+        j = 0
+        while j < len(run):
+            tw = bool(run[j].fields.get("use_twin", False))
+            k = j + 1
+            while (k < len(run)
+                   and bool(run[k].fields.get("use_twin", False)) == tw):
+                k += 1
+            self._replay_uniform_run(run[j:k], B, use_twin=tw)
+            j = k
+
+    def _replay_uniform_run(self, run, B: int, *, use_twin: bool) -> None:
+        i = 0
+        if use_twin and any(r.arrays["probes"].shape != (self.c,)
+                            for r in run):
+            i = len(run)             # foreign probe shape: replay serially
+        while len(run) - i >= B:
+            chunk = run[i:i + B]
+            Rb = jnp.asarray(np.stack([r.arrays["ratings"]
+                                       .astype(np.float32) for r in chunk]))
+            if use_twin:
+                Pb = jnp.asarray(np.stack([r.arrays["probes"]
+                                           for r in chunk]).astype(np.int32))
+                # Advance the PRNG stream exactly as the live path did:
+                # one split per twin-search op (probes still come from
+                # the records — they are authoritative).
+                self._key = self._advance_key(self._key, B)
+                st, founds, overs = self._replay_twin_chunk(
+                    self.state, Rb, Pb)
+                n_found = int(np.asarray(founds).sum())
+                self.stats.twin_hits += n_found
+                self.stats.fallbacks += B - n_found
+                self.stats.overflows += int(np.asarray(overs).sum())
+            else:
+                st = self._replay_trad_chunk(self.state, Rb)
+                self.stats.fallbacks += B
+            st.n_active.block_until_ready()
+            self.state = st
+            self.stats.onboarded += B
+            self.stats.wal_replayed += B
+            self._seq = chunk[-1].seq
+            i += B
+        for r in run[i:]:
+            self._seq = r.seq
+            self._replay_onboard(r)
+            self.stats.wal_replayed += 1
+
+    def _replay_add_rating_run(self, run, B: int) -> None:
+        i = 0
+        if len(run) >= B and self._cache is None:
+            # The serial path seeds the cache lazily on the first add;
+            # seed it from the same ratings here so the scan sees an
+            # identical carry.
+            self._cache = self._init_cache(self.state.ratings)
+        while len(run) - i >= B:
+            chunk = run[i:i + B]
+            users = np.asarray([int(r.fields["user"]) for r in chunk],
+                               np.int32)
+            items = np.asarray([int(r.fields["item"]) for r in chunk],
+                               np.int32)
+            vals = np.asarray([float(r.fields["rating"]) for r in chunk],
+                              np.float32)
+            st, cache = self._replay_add_chunk(
+                self.state, self._cache, jnp.asarray(users),
+                jnp.asarray(items), jnp.asarray(vals))
+            st.n_active.block_until_ready()
+            self.state, self._cache = st, cache
+            self.stats.wal_replayed += B
+            self._seq = chunk[-1].seq
+            i += B
+        for r in run[i:]:
+            self._seq = r.seq
+            self._replay_add_rating(r)
+            self.stats.wal_replayed += 1
 
     def _replay_onboard(self, rec) -> None:
         r0 = jnp.asarray(rec.arrays["ratings"].astype(np.float32))
@@ -576,29 +962,43 @@ class CFServer:
                                      new_state)
 
     def onboard_user(self, ratings: np.ndarray, *,
-                     use_twinsearch: bool = True) -> tuple[int, dict]:
+                     use_twinsearch: bool = True) -> OnboardResult:
         reason = guard.validate_ratings_vector(
             ratings, n_items=self.state.n_items,
             rating_range=self.rating_range)
         if reason is not None:
-            return -1, {**self._reject("onboard", reason, ratings),
-                        "twin_found": False}
+            self._reject("onboard", reason, ratings)
+            return OnboardResult(status="rejected", reason=reason,
+                                 rung=LEVEL_NAMES[self.level])
 
         self._replication_tick()
         if self.level == LEVEL_SHED:
             if self._clock() < self._shed_until:
                 self.stats.shed += 1
-                return -1, {"status": "shed", "twin_found": False,
-                            "retry_after_s": self._shed_until - self._clock()}
+                if self._lcfg.drain_on_shed:
+                    # Backpressure time is free maintenance time.
+                    self._maintenance_tick()
+                return OnboardResult(
+                    status="shed", rung=LEVEL_NAMES[self.level],
+                    retry_after_s=self._shed_until - self._clock())
             # Cooldown expired: probe the cheaper build path again.
             self._set_level(LEVEL_DEGRADED if self._replicas_degraded()
                             else LEVEL_TRADITIONAL)
 
+        # Background rotation tick: a safe point (no op in flight).
+        self._maintenance_tick()
+
         self._crashpoint("onboard.pre_wal")
+        rotated = False
         if int(self.state.n_active) >= self.state.capacity:
-            self._log("rotate")
-            self._crashpoint("rotate.post_wal")
-            self._rotate()
+            rotated = True
+            if self._rcfg.budget_rows > 0:
+                # The plan didn't finish (or start) in time: drain it now.
+                self._force_drain()
+            else:
+                self._log("rotate")
+                self._crashpoint("rotate.post_wal")
+                self._rotate()
 
         r0_np = np.asarray(ratings, dtype=np.float32)
         r0 = jnp.asarray(r0_np)
@@ -640,8 +1040,9 @@ class CFServer:
             self.quarantine.record("onboard", guard.R_ERROR, ratings,
                                    detail=repr(e))
             log.error("onboard failed after retries: %r", e)
-            return -1, {"status": "error", "reason": guard.R_ERROR,
-                        "twin_found": False, "detail": repr(e)}
+            return OnboardResult(status="error", reason=guard.R_ERROR,
+                                 rung=LEVEL_NAMES[self.level],
+                                 rotated=rotated, seq=seq, detail=repr(e))
         dt_ms = (time.perf_counter() - t0) * 1e3
         self._apply_monitor(self.monitor.step_finished())
 
@@ -651,11 +1052,28 @@ class CFServer:
         self._crashpoint("onboard.post_commit")
 
         if not self._check_and_snapshot():
-            return -1, {"status": "rolled_back", "twin_found": False,
-                        "ms": dt_ms}
+            return OnboardResult(status="rolled_back", latency_ms=dt_ms,
+                                 rung=LEVEL_NAMES[self.level],
+                                 rotated=rotated, seq=seq)
         uid = int(self.state.n_active) - 1
-        return uid, {"status": "ok", "twin_found": found, "ms": dt_ms,
-                     "level": LEVEL_NAMES[self.level]}
+        return OnboardResult(user_id=uid, status="ok", twin_found=found,
+                             latency_ms=dt_ms, rung=LEVEL_NAMES[self.level],
+                             rotated=rotated, seq=seq)
+
+    def onboard_batch(self, ratings_batch, *,
+                      use_twinsearch: bool = True) -> list[OnboardResult]:
+        """Onboard a sequence of users under one WAL group commit: the
+        batch's appends coalesce into a single write+fsync
+        (``wal.group_commit``), trading per-record durability for
+        per-batch durability — a crash mid-batch replays to the last
+        *flushed* batch boundary, never to a torn prefix.  Results are
+        per-user ``OnboardResult``s, same contract as ``onboard_user``."""
+        ctx = (self.wal.batch()
+               if self.wal is not None and self._wcfg.group_commit
+               else contextlib.nullcontext())
+        with ctx:
+            return [self.onboard_user(r, use_twinsearch=use_twinsearch)
+                    for r in ratings_batch]
 
     # -- queries ------------------------------------------------------------
 
@@ -697,6 +1115,10 @@ class CFServer:
             jnp.float32(rating))
         if self.replicas is not None:
             self.replicas.apply_rows([user], self.state)
+        if self._plan is not None:
+            # A refreshed row may invalidate part of the rotation plan's
+            # precompute; the plan re-merges it before the swap.
+            self._plan.note_write(int(user))
 
     def add_rating(self, user: int, item: int, rating: float) -> bool:
         """Returns True iff the update was applied (False = quarantined)."""

@@ -154,6 +154,10 @@ class RetryPolicy:
     backoff: float = 2.0
     sleep: Callable[[float], None] = time.sleep
     clock: Callable[[], float] = time.monotonic
+    # Called with the upcoming delay right before each backoff sleep — the
+    # server uses it to drain background maintenance (rotation chunks)
+    # during time it would otherwise spend blocked.
+    on_wait: Callable[[float], None] | None = None
 
 
 def call_with_retry(fn: Callable[[], Any],
@@ -177,6 +181,8 @@ def call_with_retry(fn: Callable[[], Any],
             if (attempt + 1 >= policy.max_attempts
                     or elapsed + delay > policy.deadline_s):
                 break
+            if policy.on_wait is not None:
+                policy.on_wait(delay)
             policy.sleep(delay)
             delay *= policy.backoff
     assert last is not None

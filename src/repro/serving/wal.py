@@ -31,6 +31,7 @@ round-trip exactly — no text encoding of floats anywhere.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import logging
 import os
@@ -121,6 +122,9 @@ class WriteAheadLog:
         self.fsync = bool(fsync)
         self.appended = 0
         self.truncations = 0
+        self.syncs = 0                     # actual write+fsync round-trips
+        self._batch_depth = 0
+        self._pending: list[bytes] = []    # encoded frames awaiting flush
         if not os.path.exists(self.path):
             with open(self.path, "wb") as f:
                 f.write(MAGIC)
@@ -177,19 +181,58 @@ class WriteAheadLog:
                arrays: dict | None = None) -> None:
         payload = _encode(WalRecord(seq=seq, op=op, fields=fields or {},
                                     arrays=arrays or {}))
-        self._f.write(_HDR.pack(len(payload), zlib.crc32(payload)) + payload)
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
+        frame = _HDR.pack(len(payload), zlib.crc32(payload)) + payload
+        if self._batch_depth > 0:
+            self._pending.append(frame)
+        else:
+            self._f.write(frame)
+            self._f.flush()
+            if self.fsync:
+                os.fsync(self._f.fileno())
+            self.syncs += 1
         if self._n_records == 0:
             self.first_seq = seq
         self.last_seq = seq
         self._n_records += 1
         self.appended += 1
 
+    # -- group commit -------------------------------------------------------
+
+    def flush(self) -> None:
+        """Write every buffered frame in one write + (optional) fsync.
+
+        Durability granularity under a batch is the batch: a crash before
+        flush loses the *whole* pending group, never a prefix of committed
+        records followed by a gap — the frames hit the file in one
+        contiguous write, and a torn write truncates from the tear."""
+        if not self._pending:
+            return
+        self._f.write(b"".join(self._pending))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.syncs += 1
+        self._pending.clear()
+
+    @contextlib.contextmanager
+    def batch(self):
+        """Coalesce appends inside the block into a single flush at exit.
+
+        Nests: only the outermost batch flushes.  Any read or truncation
+        during the batch flushes first, so buffered records are never
+        invisible to the log's own API."""
+        self._batch_depth += 1
+        try:
+            yield self
+        finally:
+            self._batch_depth -= 1
+            if self._batch_depth == 0:
+                self.flush()
+
     def records(self, after_seq: int = 0) -> list[WalRecord]:
         """Intact records with seq > ``after_seq``, in append order,
         with aborted operations (compensation records) filtered out."""
+        self.flush()
         recs, _ = self._scan()
         aborted = {r.fields.get("target") for r in recs if r.op == "abort"}
         return [r for r in recs
@@ -200,6 +243,7 @@ class WriteAheadLog:
         return self._n_records
 
     def size_bytes(self) -> int:
+        self.flush()
         return os.path.getsize(self.path)
 
     # -- truncation ---------------------------------------------------------
@@ -219,6 +263,7 @@ class WriteAheadLog:
                       last_seq=min(self.last_seq, seq))
 
     def _rewrite(self, keep, *, last_seq: int) -> None:
+        self.flush()
         recs, _ = self._scan()
         kept = [r for r in recs if keep(r)]
         tmp = self.path + ".tmp"
@@ -240,6 +285,10 @@ class WriteAheadLog:
         self.truncations += 1
 
     def close(self) -> None:
+        try:
+            self.flush()
+        except Exception:
+            pass
         try:
             self._f.close()
         except Exception:

@@ -200,6 +200,13 @@ CRASH_POINTS = ("onboard.pre_wal", "rotate.post_wal", "onboard.post_wal",
                 "onboard.post_commit", "add_rating.pre_wal",
                 "add_rating.post_wal", "add_rating.post_commit")
 
+# Crash points inside an *incremental* rotation (rotation.budget_rows > 0):
+# after a precompute slice (nothing logged — recovery must match the state
+# at the crash), after the ``rotate_commit`` WAL append but before the
+# swap applied (recovery must replay the swap), and after the swap.
+ROTATION_CRASH_POINTS = ("rotation.step", "rotation.commit_post_wal",
+                         "rotation.post_swap")
+
 
 def install_crash(server, point: str, *, nth: int = 1) -> None:
     """Arm the server's crash hook: the ``nth`` time execution reaches the

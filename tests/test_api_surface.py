@@ -1,0 +1,94 @@
+"""Snapshot of the public serving API.
+
+These tests fail when the exported surface changes *silently* — adding or
+removing a name, renaming a config field, or breaking a re-export must be
+a deliberate edit here, not an accident of an import shuffle.
+"""
+import dataclasses
+
+import pytest
+
+import repro.serving as serving
+
+
+EXPECTED_ALL = {
+    # server + results
+    "CFServer", "OnboardResult", "ServerStats",
+    # configuration
+    "ServerConfig", "SnapshotConfig", "WalConfig", "RotationConfig",
+    "LadderConfig", "ReplicationConfig",
+    # degradation ladder levels
+    "LEVEL_TWINSEARCH", "LEVEL_TRADITIONAL", "LEVEL_DEGRADED", "LEVEL_SHED",
+    # request guard
+    "Quarantine", "Rejection", "RetryPolicy", "call_with_retry",
+    # durability
+    "WalRecord", "WriteAheadLog",
+    # LM-serving utilities
+    "DedupPlan", "dedup_batch", "fan_out", "prompt_hash", "LMServer",
+}
+
+SERVER_CONFIG_FIELDS = {
+    "capacity_extra", "c_probes", "sim_tol", "measure", "seed",
+    "rating_range", "quarantine_capacity", "latency_window", "replication",
+    "snapshot", "wal", "rotation", "ladder",
+}
+
+SUB_CONFIG_FIELDS = {
+    "SnapshotConfig": {"every", "dir", "keep", "check_every"},
+    "WalConfig": {"dir", "fsync", "group_commit", "replay_batch"},
+    "RotationConfig": {"headroom", "budget_rows", "reserve_slots"},
+    "LadderConfig": {"recover_after", "shed_cooldown_s", "drain_on_shed",
+                     "retry", "monitor"},
+}
+
+ONBOARD_RESULT_FIELDS = {
+    "user_id", "status", "rung", "latency_ms", "rotated", "seq",
+    "twin_found", "reason", "detail", "retry_after_s",
+}
+
+
+class TestServingSurface:
+    def test_all_snapshot(self):
+        assert set(serving.__all__) == EXPECTED_ALL
+
+    def test_every_export_resolves(self):
+        for name in serving.__all__:
+            assert getattr(serving, name, None) is not None, name
+
+    def test_server_config_fields(self):
+        got = {f.name for f in dataclasses.fields(serving.ServerConfig)}
+        assert got == SERVER_CONFIG_FIELDS
+
+    @pytest.mark.parametrize("name", sorted(SUB_CONFIG_FIELDS))
+    def test_sub_config_fields(self, name):
+        cls = getattr(serving, name)
+        got = {f.name for f in dataclasses.fields(cls)}
+        assert got == SUB_CONFIG_FIELDS[name]
+
+    def test_onboard_result_fields(self):
+        got = {f.name for f in dataclasses.fields(serving.OnboardResult)}
+        assert got == ONBOARD_RESULT_FIELDS
+
+    def test_configs_frozen(self):
+        cfg = serving.ServerConfig()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            cfg.capacity_extra = 1
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            cfg.wal.fsync = False
+
+    def test_result_legacy_shapes(self):
+        res = serving.OnboardResult(user_id=7, status="ok", twin_found=True,
+                                    latency_ms=1.5, rung="twinsearch")
+        uid, info = res                      # legacy tuple unpack
+        assert uid == 7 and info is res
+        assert res[0] == 7 and res[1] is res
+        assert res["status"] == "ok"
+        assert res["twin_found"] is True
+        assert res["ms"] == 1.5              # legacy key -> latency_ms
+        assert res["level"] == "twinsearch"  # legacy key -> rung
+        assert res.get("retry_after_s", 0.0) == 0.0   # unset -> default
+        assert "retry_after_s" not in res
+        assert "status" in res
+        with pytest.raises(KeyError):
+            res["no_such_key"]
+        assert res.ok

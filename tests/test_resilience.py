@@ -20,18 +20,22 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core import rotate_arena, unsorted_rows
+from repro.core import (RotationPlan, rotate_arena, rotate_arena_frozen,
+                        unsorted_rows)
 from repro.core.similarity import cosine_matrix
 from repro.core.types import SENTINEL_GATE
 from repro.distributed import (ReplicaState, ReplicatedArena,
                                ReplicationConfig)
 from repro.kernels.verify_rows.ops import arena_healthy, rows_sorted_finite
 from repro.kernels.verify_rows.ref import rows_sorted_finite_ref
-from repro.serving import (CFServer, ServerStats, WriteAheadLog,
+from repro.serving import (CFServer, RotationConfig, ServerConfig,
+                           ServerStats, SnapshotConfig, WalConfig,
+                           WriteAheadLog,
                            LEVEL_DEGRADED, LEVEL_SHED, LEVEL_TRADITIONAL,
                            LEVEL_TWINSEARCH)
 from repro.serving.guard import RetryPolicy
-from repro.testing import (CRASH_POINTS, FakeClock, Flaky,
+from repro.testing import (CRASH_POINTS, ROTATION_CRASH_POINTS, FakeClock,
+                           Flaky,
                            MalformedRequests, SimulatedCrash,
                            capacity_flood, forbid_similarity_kernels,
                            inject_latency, install_crash, kill_replica,
@@ -962,3 +966,431 @@ class TestRotationHysteresis:
         s = srv.stats.summary()
         assert s["rotation_max_ms"] > 0.0
         assert "rotation_p50_ms" in s
+
+
+# ---------------------------------------------------------------------------
+# Incremental (chunked, resumable) rotation — ISSUE 9 tentpole
+# ---------------------------------------------------------------------------
+
+class TestIncrementalRotation:
+    def _flooded(self, rng, *, n=24, m=12, onboards=4):
+        """A server whose write region holds ``onboards`` burst rows."""
+        R = make_ratings(rng, n=n, m=m)
+        srv = CFServer(R, ServerConfig(capacity_extra=8, c_probes=4))
+        for i in range(onboards):
+            assert srv.onboard_user(R[i]).ok
+        return R, srv
+
+    def test_frozen_equals_classic_when_boundary_is_live(self, rng):
+        """``rotate_arena`` delegates to ``rotate_arena_frozen`` with
+        n_frozen = n_active — same result, explicitly."""
+        _, srv = self._flooded(rng)
+        a = rotate_arena(srv.state, n_base=srv.n_base, extra=5)
+        b = rotate_arena_frozen(srv.state, n_base=srv.n_base,
+                                n_frozen=int(srv.state.n_active), extra=5)
+        _assert_states_equal(a, b)
+
+    def test_plan_matches_one_shot(self, rng):
+        """Chunked precompute + finalize is bit-identical to the one-shot
+        frozen rotation, for every chunking."""
+        _, srv = self._flooded(rng)
+        st = srv.state
+        ref = rotate_arena_frozen(st, n_base=srv.n_base,
+                                  n_frozen=int(st.n_active), extra=5)
+        for chunk in (1, 3, 7, 64):
+            plan = RotationPlan(st, n_base=srv.n_base, extra=5,
+                                chunk_rows=chunk)
+            steps = 0
+            while not plan.done:
+                assert plan.step(st, 2) > 0
+                steps += 1
+            if chunk < srv.n_base:
+                assert steps > 1                  # genuinely incremental
+            _assert_states_equal(plan.finalize(st), ref)
+
+    def test_plan_matches_one_shot_under_mutation(self, rng):
+        """Mid-plan mutations — carried onboards past the frozen boundary,
+        a refreshed base row (dirty re-merge), a refreshed *burst* row
+        (stale block, restart) — all reconcile: finalize is bit-identical
+        to the one-shot frozen rotation of the final live state."""
+        R, srv = self._flooded(rng)
+        n_base = srv.n_base
+        plan = RotationPlan(srv.state, n_base=n_base, extra=6, chunk_rows=4)
+        n_frozen = plan.n_frozen
+        plan.step(srv.state, 8)                   # partial precompute
+
+        # Carried rows: onboards landing after the boundary froze.
+        assert srv.onboard_user(R[10]).ok
+        assert srv.onboard_user(R[11]).ok
+        # Dirty base row: add_rating re-sorts row 2's list.
+        assert srv.add_rating(2, 1, 5.0)
+        plan.note_write(2)
+        plan.step(srv.state, 8)
+        # Stale burst block: a frozen burst row is refreshed -> restart.
+        assert srv.add_rating(n_base + 1, 2, 3.0)
+        plan.note_write(n_base + 1)
+        assert plan.restarts == 1
+
+        out = plan.finalize(srv.state)
+        ref = rotate_arena_frozen(srv.state, n_base=n_base,
+                                  n_frozen=n_frozen, extra=6)
+        _assert_states_equal(out, ref)
+        # Carried rows kept their write-region position and the arena
+        # stayed open: n_active unchanged, new write region appended.
+        assert int(out.n_active) == int(srv.state.n_active)
+        assert out.capacity == int(srv.state.n_active) + 6
+
+    def test_incremental_flood_matches_synchronous(self, rng):
+        """The double-flood oracle, incremental edition: a server rotating
+        in budget_rows slices and a synchronously-rotating server end a
+        pure onboard flood with bit-identical materialized similarity
+        blocks (geometry may differ — content must not)."""
+        R = make_ratings(rng, n=24, m=12)
+        fresh = make_ratings(np.random.default_rng(77), n=6, m=12)
+        pool = np.concatenate([R[:4], fresh, R[8:12]], axis=0)
+
+        sync = CFServer(R, ServerConfig(capacity_extra=4, c_probes=4))
+        inc = CFServer(R, ServerConfig(
+            capacity_extra=4, c_probes=4,
+            rotation=RotationConfig(budget_rows=6)))
+        for i in range(12):
+            assert sync.onboard_user(pool[i % len(pool)]).ok
+            assert inc.onboard_user(pool[i % len(pool)]).ok
+        assert inc.stats.rotations >= 1
+
+        def materialized(srv):
+            st = rotate_arena(srv.state, n_base=srv.n_base, extra=0)
+            n = int(st.n_active)
+            return (_unsorted_active(st, n),
+                    np.asarray(st.ratings[:n]))
+        u_sync, r_sync = materialized(sync)
+        u_inc, r_inc = materialized(inc)
+        np.testing.assert_array_equal(r_sync, r_inc)
+        np.testing.assert_array_equal(u_sync, u_inc)
+
+    def test_step_maintenance_drains_between_bursts(self, rng):
+        """Quiet-period ticks finish the rotation so no onboard ever pays
+        a forced drain."""
+        R = make_ratings(rng, n=24, m=12)
+        srv = CFServer(R, ServerConfig(
+            capacity_extra=6, c_probes=4,
+            rotation=RotationConfig(budget_rows=4, reserve_slots=3)))
+        for i in range(4):                         # free slots: 6 -> 2
+            assert srv.onboard_user(R[i]).ok
+        # the plan is in flight now; drain it during the quiet period
+        ticks = 0
+        while True:
+            prog = srv.step_maintenance()
+            ticks += 1
+            if not prog["active"]:
+                break
+            assert ticks < 100
+        assert srv.stats.rotations == 1
+        assert srv.stats.forced_drains == 0
+        assert prog["free_slots"] > 2              # swap re-opened the arena
+        # and the pause the swap charged is recorded separately from the
+        # total rotation work
+        assert len(srv.stats.rotation_pause_ms) == 1
+        assert srv.stats.summary()["rotation_pause_max_ms"] > 0.0
+
+    def test_rotation_ms_still_tracks_rotations(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        srv = CFServer(R, ServerConfig(
+            capacity_extra=4, c_probes=4,
+            rotation=RotationConfig(budget_rows=4)))
+        for i in range(14):
+            assert srv.onboard_user(R[i % 20]).ok
+        assert srv.stats.rotations >= 1
+        assert len(srv.stats.rotation_ms) == srv.stats.rotations
+        assert len(srv.stats.rotation_pause_ms) == srv.stats.rotations
+
+
+class TestIncrementalRotationCrash:
+    """Crash mid-partial-rotation: recovery lands bit-exact at every
+    injected point.  The invariants are sharp per point — a pure
+    precompute slice logs nothing, a logged-but-unapplied swap replays
+    via ``rotate_arena_frozen``, an applied swap recovers as-is."""
+
+    def _config(self, tmp_path, tag):
+        return ServerConfig(
+            capacity_extra=6, c_probes=4,
+            snapshot=SnapshotConfig(every=100, check_every=100,
+                                    dir=str(tmp_path / f"{tag}-snap")),
+            wal=WalConfig(dir=str(tmp_path / f"{tag}-wal")),
+            rotation=RotationConfig(budget_rows=2))
+
+    def _crash_run(self, R, tmp_path, point):
+        cfg = self._config(tmp_path, "victim")
+        victim = CFServer(R, cfg)
+        install_crash(victim, point, nth=1)
+        crashed = False
+        for i in range(10):
+            try:
+                victim.onboard_user(R[i])
+            except SimulatedCrash as e:
+                assert e.point == point
+                crashed = True
+                break
+        assert crashed, f"crash point {point} never fired"
+        return cfg, victim
+
+    def test_crash_on_precompute_step_loses_nothing(self, rng, tmp_path):
+        """``rotation.step`` logs nothing — recovery must equal the
+        victim's live state at the crash, bit for bit."""
+        R = make_ratings(rng, n=30, m=12)
+        cfg, victim = self._crash_run(R, tmp_path, "rotation.step")
+        recovered = CFServer.recover(R, cfg)
+        _assert_states_equal(recovered.state, victim.state)
+        assert recovered.n_base == victim.n_base
+
+    def test_crash_after_commit_record_replays_the_swap(self, rng,
+                                                        tmp_path):
+        """``rotation.commit_post_wal``: the swap is logged but not
+        applied.  Recovery must replay it — bit-identical to the frozen
+        rotation of the victim's (pre-swap) live state."""
+        R = make_ratings(rng, n=30, m=12)
+        cfg, victim = self._crash_run(R, tmp_path,
+                                      "rotation.commit_post_wal")
+        plan = victim._plan
+        assert plan is not None and plan.done
+        expected = rotate_arena_frozen(victim.state, n_base=plan.n_base,
+                                       n_frozen=plan.n_frozen,
+                                       extra=plan.extra)
+        recovered = CFServer.recover(R, cfg)
+        _assert_states_equal(recovered.state, expected)
+        assert recovered.n_base == plan.n_frozen
+        assert recovered.stats.rotations == 1
+
+    def test_crash_after_swap_recovers_the_swap(self, rng, tmp_path):
+        """``rotation.post_swap``: swap logged and applied — recovery
+        equals the victim's post-swap state."""
+        R = make_ratings(rng, n=30, m=12)
+        cfg, victim = self._crash_run(R, tmp_path, "rotation.post_swap")
+        recovered = CFServer.recover(R, cfg)
+        _assert_states_equal(recovered.state, victim.state)
+        assert recovered.n_base == victim.n_base
+        assert recovered.state.capacity == victim.state.capacity
+
+    @pytest.mark.parametrize("point", ROTATION_CRASH_POINTS)
+    def test_recovered_run_converges_with_uncrashed(self, rng, tmp_path,
+                                                    point):
+        """After recovery, re-issuing the unapplied requests converges to
+        the same arena as an uncrashed incremental run."""
+        R = make_ratings(rng, n=30, m=12)
+        n_ops = 10
+        oracle = CFServer(R, self._config(tmp_path, "oracle"))
+        for i in range(n_ops):
+            assert oracle.onboard_user(R[i]).ok
+
+        cfg, victim = self._crash_run(R, tmp_path, point)
+        recovered = CFServer.recover(R, cfg)
+        applied = int(recovered.state.n_active) - 30
+        for i in range(applied, n_ops):
+            assert recovered.onboard_user(R[i]).ok
+        _assert_states_equal(recovered.state, oracle.state)
+        assert recovered.n_base == oracle.n_base
+
+
+# ---------------------------------------------------------------------------
+# WAL group commit + batched replay — ISSUE 9 tentpole
+# ---------------------------------------------------------------------------
+
+class TestWalGroupCommit:
+    def _rec(self, i):
+        return dict(fields={"i": i},
+                    arrays={"x": np.full(4, i, np.float32)})
+
+    def test_batch_coalesces_into_one_sync(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "w"))
+        with wal.batch():
+            for i in range(5):
+                wal.append(i + 1, "onboard", **self._rec(i))
+            assert wal.syncs == 0            # nothing flushed mid-batch
+        assert wal.syncs == 1                # one write+fsync for all 5
+        assert [r.seq for r in wal.records()] == [1, 2, 3, 4, 5]
+        assert wal.appended == 5 and len(wal) == 5
+
+    def test_unbatched_appends_sync_each(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "w"))
+        for i in range(5):
+            wal.append(i + 1, "onboard", **self._rec(i))
+        assert wal.syncs == 5
+
+    def test_batched_records_survive_reopen(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "w"))
+        with wal.batch():
+            for i in range(3):
+                wal.append(i + 1, "onboard", **self._rec(i))
+        wal.close()
+        w2 = WriteAheadLog(str(tmp_path / "w"))
+        recs = w2.records()
+        assert [r.seq for r in recs] == [1, 2, 3]
+        np.testing.assert_array_equal(recs[2].arrays["x"],
+                                      np.full(4, 2, np.float32))
+
+    def test_reads_and_truncation_flush_pending(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "w"))
+        with wal.batch():
+            wal.append(1, "onboard", **self._rec(1))
+            # a read inside the batch must see the buffered record
+            assert [r.seq for r in wal.records()] == [1]
+            assert wal.syncs == 1
+            wal.append(2, "onboard", **self._rec(2))
+            wal.truncate_after(1)            # flushes, then rewrites
+            assert len(wal) == 1 and wal.last_seq == 1
+        assert [r.seq for r in wal.records()] == [1]
+
+    def test_nested_batches_flush_once_at_outermost(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "w"))
+        with wal.batch():
+            wal.append(1, "onboard", **self._rec(1))
+            with wal.batch():
+                wal.append(2, "onboard", **self._rec(2))
+            assert wal.syncs == 0            # inner exit does not flush
+        assert wal.syncs == 1
+
+    def test_onboard_batch_one_fsync_and_bit_exact_recovery(self, rng,
+                                                            tmp_path):
+        R = make_ratings(rng, n=24, m=12)
+        cfg = ServerConfig(capacity_extra=16, c_probes=4,
+                           wal=WalConfig(dir=str(tmp_path / "wal")))
+        srv = CFServer(R, cfg)
+        results = srv.onboard_batch([R[i] for i in range(5)])
+        assert all(r.ok for r in results)
+        assert srv.wal.syncs == 1            # the whole batch: one fsync
+        # recovery over the group-committed log is still bit-exact
+        recovered = CFServer.recover(R, cfg)
+        _assert_states_equal(recovered.state, srv.state)
+
+    def test_group_commit_off_syncs_per_record(self, rng, tmp_path):
+        R = make_ratings(rng, n=24, m=12)
+        cfg = ServerConfig(capacity_extra=16, c_probes=4,
+                           wal=WalConfig(dir=str(tmp_path / "wal"),
+                                         group_commit=False))
+        srv = CFServer(R, cfg)
+        srv.onboard_batch([R[i] for i in range(5)])
+        assert srv.wal.syncs == 5
+
+
+class TestBatchedReplay:
+    def _mutate(self, srv, R, fresh):
+        """A mixed op stream: twin + traditional onboards (runs longer
+        than the replay chunk), then add_ratings, then more onboards."""
+        for i in range(6):
+            assert srv.onboard_user(R[i]).ok
+        for i in range(3):
+            assert srv.onboard_user(fresh[i], use_twinsearch=False).ok
+        for u, it, v in ((2, 1, 5.0), (0, 3, 4.0), (25, 2, 3.0),
+                         (7, 5, 2.0), (1, 1, 1.0)):
+            assert srv.add_rating(u, it, v)
+        for i in range(3):
+            assert srv.onboard_user(R[10 + i]).ok
+
+    def test_batched_replay_bit_exact_vs_serial_and_live(self, rng,
+                                                         tmp_path):
+        R = make_ratings(rng, n=24, m=12)
+        fresh = make_ratings(np.random.default_rng(55), n=4, m=12)
+
+        def cfg(batch):
+            # WAL only (no snapshot dir): recovery replays the full log
+            # from a fresh build, and takes no truncating checkpoint, so
+            # both recoveries see the same records.
+            return ServerConfig(capacity_extra=16, c_probes=4,
+                                wal=WalConfig(dir=str(tmp_path / "wal"),
+                                              replay_batch=batch))
+
+        live = CFServer(R, cfg(1))
+        self._mutate(live, R, fresh)
+
+        serial = CFServer.recover(R, cfg(1))
+        batched = CFServer.recover(R, cfg(4))
+        assert serial.stats.wal_replayed == batched.stats.wal_replayed == 17
+        _assert_states_equal(serial.state, live.state)
+        _assert_states_equal(batched.state, live.state)
+        assert batched.stats.twin_hits == serial.stats.twin_hits
+        assert batched.stats.fallbacks == serial.stats.fallbacks
+        assert batched.stats.onboarded == serial.stats.onboarded
+        # and both keep serving identically
+        assert batched.recommend(3, n=5) == serial.recommend(3, n=5)
+
+    def test_batched_replay_spans_rotation_records(self, rng, tmp_path):
+        """Rotations break replay runs; the replayed geometry and state
+        still land bit-exact with the live server."""
+        R = make_ratings(rng, n=24, m=12)
+
+        def cfg(batch):
+            return ServerConfig(capacity_extra=4, c_probes=4,
+                                wal=WalConfig(dir=str(tmp_path / "wal"),
+                                              replay_batch=batch))
+
+        live = CFServer(R, cfg(1))
+        for i in range(11):                  # > capacity_extra: rotates
+            assert live.onboard_user(R[i % 20]).ok
+        assert live.stats.rotations >= 1
+
+        batched = CFServer.recover(R, cfg(3))
+        _assert_states_equal(batched.state, live.state)
+        assert batched.n_base == live.n_base
+        assert batched.stats.rotations == live.stats.rotations
+
+
+# ---------------------------------------------------------------------------
+# ServerConfig surface (api_redesign satellites)
+# ---------------------------------------------------------------------------
+
+class TestServerConfigShim:
+    LEGACY = dict(capacity_extra=12, c_probes=5, sim_tol=1e-5,
+                  measure="cosine", seed=3, rating_range=(1.0, 5.0),
+                  quarantine_capacity=128, latency_window=256,
+                  recover_after=16, shed_cooldown_s=0.5,
+                  snapshot_every=32, snapshot_keep=2, check_every=4,
+                  rotate_headroom=1.5, wal_fsync=False,
+                  wal_group_commit=False, wal_replay_batch=8,
+                  rotation_budget_rows=3, rotation_reserve_slots=2,
+                  drain_on_shed=False)
+
+    def test_kwargs_round_trip(self):
+        cfg = ServerConfig.from_kwargs(**self.LEGACY)
+        flat = cfg.to_kwargs()
+        for key, val in self.LEGACY.items():
+            assert flat[key] == val, key
+        # and the flat form rebuilds the identical config
+        assert ServerConfig.from_kwargs(**flat) == cfg
+
+    def test_kwargs_map_into_sub_configs(self):
+        cfg = ServerConfig.from_kwargs(**self.LEGACY)
+        assert cfg.capacity_extra == 12
+        assert cfg.snapshot.every == 32 and cfg.snapshot.check_every == 4
+        assert cfg.wal.fsync is False and cfg.wal.replay_batch == 8
+        assert cfg.rotation.headroom == 1.5
+        assert cfg.rotation.budget_rows == 3
+        assert cfg.rotation.reserve_slots == 2
+        assert cfg.ladder.recover_after == 16
+        assert cfg.ladder.drain_on_shed is False
+
+    def test_unknown_kwarg_raises_type_error(self):
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            ServerConfig.from_kwargs(no_such_knob=1)
+
+    def test_legacy_kwargs_warn_and_match_config(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        with pytest.warns(DeprecationWarning, match="ServerConfig"):
+            old = CFServer(R, capacity_extra=4, c_probes=4, seed=7)
+        new = CFServer(R, ServerConfig(capacity_extra=4, c_probes=4,
+                                       seed=7))
+        _assert_states_equal(old.state, new.state)
+        a = old.onboard_user(R[0])
+        b = new.onboard_user(R[0])
+        assert a.user_id == b.user_id and a.twin_found == b.twin_found
+
+    def test_config_surface_does_not_warn(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error", DeprecationWarning)
+            CFServer(R, ServerConfig(capacity_extra=4, c_probes=4))
+
+    def test_config_plus_legacy_kwargs_is_an_error(self, rng):
+        R = make_ratings(rng, n=20, m=10)
+        with pytest.raises(ValueError, match="not both"):
+            CFServer(R, ServerConfig(), capacity_extra=4)

@@ -12,6 +12,9 @@
   recovery_bench     durability throughput: WAL append/group-commit cost,
                      serial vs batched replay, re-replication rows/s,
                      replica repair
+  query_bench        batched read path: scalar loop vs batched vs fused
+                     kernel vs server twin-dedup, twin-fraction sweep
+                     (REPRO_BENCH_FAST=1 -> CI compile-check shapes)
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full-scale
 cells come from ``python -m repro.launch.dryrun --all`` +
@@ -28,15 +31,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["twinsearch", "setsize", "scaling",
                                        "kernel", "maintenance",
-                                       "resilience", "recovery"],
+                                       "resilience", "recovery", "query"],
                     default=None)
     args, _ = ap.parse_known_args()
 
     csv = CSV()
     csv.header()
-    from benchmarks import (kernel_bench, maintenance_bench, recovery_bench,
-                            resilience_bench, scaling_bench, setsize_bench,
-                            twinsearch_bench)
+    from benchmarks import (kernel_bench, maintenance_bench, query_bench,
+                            recovery_bench, resilience_bench, scaling_bench,
+                            setsize_bench, twinsearch_bench)
     todo = {
         "setsize": setsize_bench.main,
         "scaling": scaling_bench.main,
@@ -44,6 +47,7 @@ def main() -> None:
         "maintenance": maintenance_bench.main,
         "resilience": resilience_bench.main,
         "recovery": recovery_bench.main,
+        "query": query_bench.main,
         "twinsearch": twinsearch_bench.main,
     }
     for name, fn in todo.items():

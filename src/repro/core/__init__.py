@@ -7,8 +7,10 @@ from repro.core.types import (CFState, OnboardStats, TwinResult, SENTINEL,
 from repro.core.similarity import (cosine_matrix, cosine_vs_all,
                                    pearson_matrix, adjusted_cosine_matrix,
                                    similarity_matrix, row_norms)
-from repro.core.knn import (build_state, sort_rows, top_k_neighbors, predict,
-                            recommend)
+from repro.core.knn import (build_state, sort_rows, top_k_neighbors,
+                            top_k_neighbors_batch, predict,
+                            predict_from_neighbors, predict_batch, recommend,
+                            recommend_from_neighbors, recommend_batch)
 from repro.core.baseline import (build_list, append_user, onboard_traditional,
                                  onboard_batch_traditional)
 from repro.core.twinsearch import (twinsearch_find, onboard_twinsearch,
@@ -25,8 +27,10 @@ __all__ = [
     "CFState", "OnboardStats", "TwinResult", "SENTINEL", "SENTINEL_GATE",
     "active_mask", "set0_cap", "cosine_matrix", "cosine_vs_all",
     "pearson_matrix", "adjusted_cosine_matrix", "similarity_matrix",
-    "row_norms", "build_state", "sort_rows", "top_k_neighbors", "predict",
-    "recommend", "build_list", "append_user", "onboard_traditional",
+    "row_norms", "build_state", "sort_rows", "top_k_neighbors",
+    "top_k_neighbors_batch", "predict", "predict_from_neighbors",
+    "predict_batch", "recommend", "recommend_from_neighbors",
+    "recommend_batch", "build_list", "append_user", "onboard_traditional",
     "onboard_batch_traditional", "twinsearch_find", "onboard_twinsearch",
     "onboard_batch", "make_probes", "probe_sims", "candidate_mask",
     "verify_candidates", "insert_into_lists", "insert_batch_into_lists",

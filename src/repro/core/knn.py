@@ -51,13 +51,41 @@ def build_state(R: jax.Array, *, capacity_extra: int = 0,
 def top_k_neighbors(state: CFState, user: jax.Array, k: int
                     ) -> tuple[jax.Array, jax.Array]:
     """(k,) highest-similarity neighbours of ``user`` (excluding self),
-    from the sorted list tail."""
+    from the sorted list tail.
+
+    Slots past the real neighbour count (``k > n_active - 1`` on a
+    half-empty arena) carry SENTINEL similarity and are clamped to
+    neighbour 0, so downstream gathers stay in-bounds and weight them
+    zero — they never contribute to a prediction.  Entries whose index
+    points at an inactive arena row are masked out entirely: a rotated or
+    partially-filled arena may hold stale-looking values in dead slots.
+    """
     vals = state.sim_vals[user]
     idx = state.sim_idx[user]
     not_self = idx != user
-    ranked = jnp.where(not_self & (vals > SENTINEL_GATE), vals, SENTINEL)
-    top_vals, pos = jax.lax.top_k(ranked, k)
-    return top_vals, idx[pos]
+    live = idx < state.n_active
+    ranked = jnp.where(not_self & live & (vals > SENTINEL_GATE), vals,
+                       SENTINEL)
+    kk = min(k, ranked.shape[0])
+    top_vals, pos = jax.lax.top_k(ranked, kk)
+    nbrs = idx[pos]
+    if kk < k:                      # k beyond capacity: pad with dead slots
+        top_vals = jnp.concatenate(
+            [top_vals, jnp.full((k - kk,), SENTINEL, top_vals.dtype)])
+        nbrs = jnp.concatenate([nbrs, jnp.zeros((k - kk,), nbrs.dtype)])
+    nbrs = jnp.where(top_vals > SENTINEL_GATE, nbrs, 0)
+    return top_vals, nbrs
+
+
+def predict_from_neighbors(state: CFState, sims: jax.Array,
+                           nbrs: jax.Array, item: jax.Array) -> jax.Array:
+    """Scoring half of ``predict``: weighted average over a precomputed
+    (k,) neighbour list (SENTINEL-similarity slots weigh zero)."""
+    r = state.ratings[nbrs, item]
+    w = jnp.where((r != 0) & (sims > 0), sims, 0.0)
+    denom = jnp.sum(jnp.abs(w))
+    return jnp.where(denom > 0, jnp.sum(w * r) / jnp.maximum(denom, 1e-12),
+                     0.0)
 
 
 def predict(state: CFState, user: jax.Array, item: jax.Array, k: int = 20
@@ -66,17 +94,15 @@ def predict(state: CFState, user: jax.Array, item: jax.Array, k: int = 20
     Σ_v sim(u,v)·r(v,i) / Σ_v |sim(u,v)| over the top-k neighbours of u that
     rated i."""
     sims, nbrs = top_k_neighbors(state, user, k)
-    r = state.ratings[nbrs, item]
-    w = jnp.where((r != 0) & (sims > 0), sims, 0.0)
-    denom = jnp.sum(jnp.abs(w))
-    return jnp.where(denom > 0, jnp.sum(w * r) / jnp.maximum(denom, 1e-12),
-                     0.0)
+    return predict_from_neighbors(state, sims, nbrs, item)
 
 
-def recommend(state: CFState, user: jax.Array, k_neighbors: int = 20,
-              n_rec: int = 10) -> tuple[jax.Array, jax.Array]:
-    """Top-``n_rec`` unseen items for ``user`` by neighbour-weighted score."""
-    sims, nbrs = top_k_neighbors(state, user, k_neighbors)
+def recommend_from_neighbors(state: CFState, user: jax.Array,
+                             sims: jax.Array, nbrs: jax.Array,
+                             n_rec: int = 10
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Scoring half of ``recommend``: neighbour-weighted item scores from a
+    precomputed (k,) neighbour list, seen items masked to -inf."""
     w = jnp.maximum(sims, 0.0)
     nbr_ratings = state.ratings[nbrs]                      # (k, m)
     rated_mask = (nbr_ratings != 0).astype(jnp.float32)
@@ -85,3 +111,36 @@ def recommend(state: CFState, user: jax.Array, k_neighbors: int = 20,
     scores = scores / jnp.maximum(denom, 1e-12)
     scores = jnp.where(state.ratings[user] != 0, -jnp.inf, scores)
     return jax.lax.top_k(scores, n_rec)
+
+
+def recommend(state: CFState, user: jax.Array, k_neighbors: int = 20,
+              n_rec: int = 10) -> tuple[jax.Array, jax.Array]:
+    """Top-``n_rec`` unseen items for ``user`` by neighbour-weighted score."""
+    sims, nbrs = top_k_neighbors(state, user, k_neighbors)
+    return recommend_from_neighbors(state, user, sims, nbrs, n_rec)
+
+
+# ---------------------------------------------------------------------------
+# Batched query path — one dispatch, one host transfer per batch
+# ---------------------------------------------------------------------------
+
+def top_k_neighbors_batch(state: CFState, users: jax.Array, k: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """(B,) users -> ((B, k) sims, (B, k) neighbour ids), vmapped."""
+    return jax.vmap(lambda u: top_k_neighbors(state, u, k))(users)
+
+
+def predict_batch(state: CFState, users: jax.Array, items: jax.Array,
+                  k: int = 20) -> jax.Array:
+    """(B,) users x (B,) items -> (B,) predictions.  Row b is bit-identical
+    to ``predict(state, users[b], items[b], k)`` — the batch is a vmap of
+    the scalar path, not a re-derivation."""
+    return jax.vmap(lambda u, i: predict(state, u, i, k))(users, items)
+
+
+def recommend_batch(state: CFState, users: jax.Array,
+                    k_neighbors: int = 20, n_rec: int = 10
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(B,) users -> ((B, n_rec) scores, (B, n_rec) items), row-wise
+    bit-identical to the scalar ``recommend``."""
+    return jax.vmap(lambda u: recommend(state, u, k_neighbors, n_rec))(users)

@@ -11,12 +11,17 @@ oracle the tests assert against in interpret mode).
   embedding_bag/  scalar-prefetch row-gather bag sum (recsys substrate)
   list_merge/     fused k-way merge-insert for sorted-list maintenance
                   (burst-batched onboarding: k inserts, one arena pass)
+  knn_score/      fused batched kNN recommendation scoring (the serving
+                  read path: scalar-prefetch neighbour gather -> weighted
+                  score -> normalise -> seen mask, item-tiled)
 """
 from repro.kernels.similarity.ops import cosine_similarity
 from repro.kernels.twin_probe.ops import twin_probe
 from repro.kernels.verify_rows.ops import verify_rows
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.list_merge.ops import merge_insert
+from repro.kernels.knn_score.ops import knn_scores, knn_recommend_topn
 
 __all__ = ["cosine_similarity", "twin_probe", "verify_rows",
-           "embedding_bag", "merge_insert"]
+           "embedding_bag", "merge_insert", "knn_scores",
+           "knn_recommend_topn"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused batched kNN scoring kernel.
+
+Semantics (shared by every backend): for a batch of B users, each with k
+precomputed neighbours (``top_k_neighbors_batch``), score every item as
+the positive-weighted average of the neighbours' ratings —
+
+    score[b, j] = Σ_t w[b,t]·r(nbr[b,t], j) / max(Σ_t w[b,t]·[r≠0], eps)
+
+— then mask items the user has already rated to -inf so a downstream
+top-n only surfaces unseen items.  This is exactly the einsum logic of
+the scalar ``core.knn.recommend`` lifted to a batch axis; the Pallas
+kernel reproduces it without ever materialising the (B, k, m)
+neighbour-ratings gather.
+
+Weight contract: ``w`` is the already-clamped ``max(sims, 0)`` — a
+SENTINEL (dead / padded) neighbour slot arrives as weight 0 and is an
+exact no-op, the same gating mechanism ``list_merge`` uses for masked
+insert lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def knn_scores_ref(ratings: jax.Array, w: jax.Array, nbrs: jax.Array,
+                   users: jax.Array) -> jax.Array:
+    """ratings: (N, m) arena; w: (B, k) non-negative neighbour weights;
+    nbrs: (B, k) int32 neighbour rows; users: (B,) int32 querying users.
+    Returns (B, m) float32 scores with seen items at -inf."""
+    nbr_ratings = ratings[nbrs]                            # (B, k, m)
+    rated_mask = (nbr_ratings != 0).astype(jnp.float32)
+    scores = jnp.einsum("bk,bkm->bm", w, nbr_ratings)
+    denom = jnp.einsum("bk,bkm->bm", w, rated_mask)
+    scores = scores / jnp.maximum(denom, EPS)
+    return jnp.where(ratings[users] != 0, -jnp.inf, scores)

@@ -10,7 +10,8 @@ from repro.serving.cf_server import (CFServer, OnboardResult, ServerStats,
                                      LEVEL_TRADITIONAL, LEVEL_TWINSEARCH)
 from repro.serving.config import (LadderConfig, RotationConfig,
                                   ServerConfig, SnapshotConfig, WalConfig)
-from repro.serving.dedup import DedupPlan, dedup_batch, fan_out, prompt_hash
+from repro.serving.dedup import (DedupPlan, dedup_batch, dedup_rows,
+                                 fan_out, prompt_hash)
 from repro.serving.guard import (Quarantine, Rejection, RetryPolicy,
                                  call_with_retry)
 from repro.serving.lm_server import LMServer
@@ -28,6 +29,7 @@ __all__ = [
     "Quarantine", "Rejection", "RetryPolicy", "call_with_retry",
     # durability
     "WalRecord", "WriteAheadLog",
-    # LM-serving utilities
-    "DedupPlan", "dedup_batch", "fan_out", "prompt_hash", "LMServer",
+    # twin-dedup utilities (LM prompts + CF query batches)
+    "DedupPlan", "dedup_batch", "dedup_rows", "fan_out", "prompt_hash",
+    "LMServer",
 ]

@@ -11,6 +11,12 @@ Request surface (what a real deployment fronts with an RPC layer):
                                   group commit (one fsync per batch).
   * ``recommend(user, n)``      — top-n unseen items via kNN scores.
   * ``predict(user, item)``     — kNN weighted-average rating.
+  * ``recommend_batch(users)``  — B recommendations in one device
+                                  dispatch: per-row guard validation
+                                  (a bad row is quarantined, the rest are
+                                  served), twin-query dedup before
+                                  dispatch, one host transfer of results.
+  * ``predict_batch(users, items)`` — B predictions, same contract.
   * ``add_rating(user, item, r)``— incremental (Papagelis-style) update of
                                   the affected similarity row.
   * ``step_maintenance()``      — drain a slice of any pending incremental
@@ -78,6 +84,21 @@ recompute.**
     corruption) pair with a cheap NaN/ordering invariant check
     (``kernels/verify_rows``) every ``check_every`` onboards.
 
+Query contract: **reads are never refused.**  The batch endpoints
+validate per row — a malformed row is quarantined and its slot answers
+empty/0.0 while the rest of the batch is served — and the degradation
+ladder's shed rung *degrades* queries (``k_neighbors`` drops by
+``SHED_QUERY_K_DIV``) instead of shedding them: a read is cheaper than
+the refusal dance.  Before dispatch, **twin-query dedup**
+(``serving/dedup.py``) collapses rows whose scoring inputs — top-k
+neighbour sims + ids and, for recommendations, the user's own rating
+row — are bitwise identical: the paper's twins share similarity lists,
+so they provably share recommendation scores, and only the unique rows
+are scored (``ServerStats.query_dedup_savings``).  Unique-row and batch
+shapes are bucketed to powers of two so the jitted query programs are
+compile-once per bucket, and each batch pays exactly two host transfers
+(the probe for dedup keys, the fanned-out results).
+
 State is the fixed-capacity ``CFState`` (jit-friendly); all mutating ops
 are jitted once per arena shape and reused.  ``stats`` tracks twin hits /
 fallbacks / latencies / resilience transitions — the serving-side
@@ -106,8 +127,10 @@ from repro.core import update as upd_lib
 from repro.core.rotation import (RotationPlan, rotate_arena,
                                  rotate_arena_frozen)
 from repro.distributed.replication import ReplicatedArena, ReplicationConfig
+from repro.kernels.knn_score.ops import knn_recommend_topn
 from repro.kernels.verify_rows.ops import arena_healthy
 from repro.serving import guard
+from repro.serving.dedup import dedup_rows
 from repro.serving.config import ServerConfig
 from repro.serving.wal import WriteAheadLog
 from repro.training import checkpoint
@@ -124,6 +147,17 @@ LEVEL_NAMES = {LEVEL_TWINSEARCH: "twinsearch",
                LEVEL_TRADITIONAL: "traditional",
                LEVEL_DEGRADED: "degraded",
                LEVEL_SHED: "shed"}
+
+# Shed-rung query degradation: reads are served with k_neighbors // this
+# (floor 1) instead of being refused — the ladder's read-path analogue of
+# the twinsearch -> traditional write-path fallback.
+SHED_QUERY_K_DIV = 4
+
+
+def _bucket_pow2(n: int) -> int:
+    """Smallest power of two >= n — the jit-cache shape bucket for the
+    variable-size query batches (bounded recompiles, fixed shapes)."""
+    return 1 << max(0, n - 1).bit_length()
 
 
 @dataclass
@@ -146,10 +180,16 @@ class ServerStats:
     wal_replayed: int = 0
     plan_restarts: int = 0      # incremental-rotation precompute restarts
     forced_drains: int = 0      # buffer filled before the plan finished
+    queries: int = 0            # query rows served (valid rows only)
+    query_batches: int = 0      # recommend_batch / predict_batch calls
+    query_unique: int = 0       # rows actually scored after twin dedup
+    query_degraded: int = 0     # rows served at shed-reduced k_neighbors
     latency_window: int = 1024
     onboard_ms: deque = field(init=False)
     rotation_ms: deque = field(init=False)
     rotation_pause_ms: deque = field(init=False)
+    query_ms: deque = field(init=False)
+    query_dedup_savings: deque = field(init=False)
 
     def __post_init__(self) -> None:
         # Fixed-size ring buffers: sustained traffic must not grow host
@@ -159,10 +199,15 @@ class ServerStats:
         # What rotation actually cost a *single request*: the synchronous
         # stall (full rotation, or just the final swap when incremental).
         self.rotation_pause_ms = deque(maxlen=64)
+        # Per-batch query latency + twin-dedup savings fraction (the
+        # trailing-window view; queries/query_unique are the totals).
+        self.query_ms = deque(maxlen=self.latency_window)
+        self.query_dedup_savings = deque(maxlen=self.latency_window)
 
     def summary(self) -> dict:
         ms = sorted(self.onboard_ms) or [0.0]
         rot = sorted(self.rotation_ms) or [0.0]
+        qms = sorted(self.query_ms) or [0.0]
         return {
             "onboarded": self.onboarded,
             "twin_hits": self.twin_hits,
@@ -187,6 +232,14 @@ class ServerStats:
             "rotation_p50_ms": rot[len(rot) // 2],
             "rotation_max_ms": rot[-1],
             "rotation_pause_max_ms": max(self.rotation_pause_ms, default=0.0),
+            "queries": self.queries,
+            "query_batches": self.query_batches,
+            "query_unique": self.query_unique,
+            "query_degraded": self.query_degraded,
+            "query_p50_ms": qms[len(qms) // 2],
+            "query_p99_ms": qms[min(len(qms) - 1, int(len(qms) * 0.99))],
+            "query_dedup_savings": (1.0 - self.query_unique
+                                    / max(self.queries, 1)),
         }
 
 
@@ -374,6 +427,26 @@ class CFServer:
         self._recommend = jax.jit(knn.recommend,
                                   static_argnames=("k_neighbors", "n_rec"))
         self._predict = jax.jit(knn.predict, static_argnames=("k",))
+
+        # Batched query path.  The probe returns everything the host needs
+        # to build twin-dedup keys in ONE transfer (top-k sims + neighbour
+        # ids + the users' own rating rows); the score call then runs only
+        # the deduped rows through the fused scoring kernel and cuts top-n
+        # on device, so results come back in one more transfer.  k / n_rec
+        # are static; batch shapes are pow2-bucketed by the endpoints.
+        self._probe_rec = jax.jit(
+            lambda st, users, k: (
+                *knn.top_k_neighbors_batch(st, users, k),
+                st.ratings[users]),
+            static_argnames=("k",))
+        self._probe_topk = jax.jit(knn.top_k_neighbors_batch,
+                                   static_argnames=("k",))
+        self._score_rec = jax.jit(
+            lambda st, sims, nbrs, users, n_rec: knn_recommend_topn(
+                st.ratings, jnp.maximum(sims, 0.0), nbrs, users, n_rec),
+            static_argnames=("n_rec",))
+        self._score_pred = jax.jit(
+            jax.vmap(knn.predict_from_neighbors, in_axes=(None, 0, 0, 0)))
         self._init_cache = jax.jit(upd_lib.init_cache)
         self._add = jax.jit(upd_lib.add_rating)
         self._healthy = arena_healthy
@@ -1077,32 +1150,137 @@ class CFServer:
 
     # -- queries ------------------------------------------------------------
 
-    def recommend(self, user: int, n: int = 10,
-                  k_neighbors: int = 20) -> list[tuple[int, float]]:
-        if guard.validate_user_id(user, int(self.state.n_active)):
-            self._reject("recommend", guard.R_USER_ID, user)
-            return []
+    def _query_k(self, k_neighbors: int) -> int:
+        """Degradation-ladder interaction for reads: the shed rung serves
+        queries at a reduced neighbour count instead of refusing them."""
+        if self.level == LEVEL_SHED:
+            return max(1, int(k_neighbors) // SHED_QUERY_K_DIV)
+        return int(k_neighbors)
+
+    def _pre_query(self) -> None:
         if self.replicas is not None:
             # Failover read: heal any poisoned rows from replicas before
             # answering, so a lost shard degrades durability, not answers.
             self._replication_tick()
             self._state_ok()
-        scores, items = self._recommend(self.state, jnp.int32(user),
-                                        k_neighbors=k_neighbors, n_rec=n)
-        return [(int(i), float(s)) for s, i in zip(scores, items)]
+
+    def _note_query_batch(self, n_valid: int, n_unique: int, savings: float,
+                          dt_ms: float, degraded: bool) -> None:
+        self.stats.query_batches += 1
+        self.stats.queries += n_valid
+        self.stats.query_unique += n_unique
+        self.stats.query_ms.append(dt_ms)
+        self.stats.query_dedup_savings.append(savings)
+        if degraded:
+            self.stats.query_degraded += n_valid
+
+    @staticmethod
+    def _pad_bucket(arr: np.ndarray) -> np.ndarray:
+        """Pad axis 0 to the pow2 bucket by repeating the last row — a
+        valid, already-requested row, so the padded program computes
+        nothing undefined and the host slices the extras away."""
+        n = arr.shape[0]
+        pad = _bucket_pow2(n) - n
+        if pad == 0:
+            return arr
+        return np.concatenate([arr, np.repeat(arr[-1:], pad, axis=0)])
+
+    def recommend_batch(self, users, n: int = 10, k_neighbors: int = 20
+                        ) -> list[list[tuple[int, float]]]:
+        """Top-``n`` recommendations for a batch of users in one device
+        dispatch.  Per-row guard: an invalid user id is quarantined and
+        its slot answers ``[]`` while the rest of the batch is served.
+        Twin dedup: rows whose (top-k sims, neighbour ids, own-ratings)
+        keys are bitwise identical are scored once and fanned out."""
+        users = list(users)
+        results: list[list[tuple[int, float]]] = [[] for _ in users]
+        valid = [i for i, u in enumerate(users)
+                 if not (guard.validate_user_id(u, int(self.state.n_active))
+                         and self._reject("recommend", guard.R_USER_ID, u))]
+        if not valid:
+            return results
+        self._pre_query()
+        k_eff = self._query_k(k_neighbors)
+        t0 = time.perf_counter()
+
+        uvec = np.asarray([int(users[i]) for i in valid], np.int32)
+        sims, nbrs, rows = jax.device_get(self._probe_rec(
+            self.state, jnp.asarray(self._pad_bucket(uvec)), k_eff))
+        B = len(uvec)
+        sims, nbrs, rows = sims[:B], nbrs[:B], rows[:B]
+
+        # Twin dedup (probe -> exact verify): the scoring kernel is a
+        # deterministic function of exactly (sims, nbrs, own row), so
+        # bitwise-equal keys provably share scores.
+        keys = np.concatenate([sims.view(np.uint32), nbrs.view(np.uint32),
+                               rows.view(np.uint32)], axis=1)
+        plan = dedup_rows(keys)
+        sel = self._pad_bucket(plan.unique_rows)
+        scores, items = jax.device_get(self._score_rec(
+            self.state, jnp.asarray(sims[sel]), jnp.asarray(nbrs[sel]),
+            jnp.asarray(uvec[sel]), n))
+
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        for pos, i in enumerate(valid):
+            u = int(plan.scatter[pos])           # fan_out, zipped on host
+            results[i] = [(int(it), float(s))
+                          for s, it in zip(scores[u], items[u])]
+        self._note_query_batch(B, plan.n_unique, plan.savings, dt_ms,
+                               degraded=k_eff != int(k_neighbors))
+        return results
+
+    def predict_batch(self, users, items, k: int = 20) -> list[float]:
+        """kNN rating predictions for B (user, item) pairs in one device
+        dispatch; invalid rows are quarantined and answer 0.0.  Twin
+        dedup keys on (top-k sims, neighbour ids, item)."""
+        users, items = list(users), list(items)
+        assert len(users) == len(items), (len(users), len(items))
+        results = [0.0] * len(users)
+        valid = []
+        for i, (u, it) in enumerate(zip(users, items)):
+            if guard.validate_user_id(u, int(self.state.n_active)):
+                self._reject("predict", guard.R_USER_ID, u)
+            elif guard.validate_item_id(it, self.state.n_items):
+                self._reject("predict", guard.R_ITEM_ID, it)
+            else:
+                valid.append(i)
+        if not valid:
+            return results
+        self._pre_query()
+        k_eff = self._query_k(k)
+        t0 = time.perf_counter()
+
+        uvec = np.asarray([int(users[i]) for i in valid], np.int32)
+        ivec = np.asarray([int(items[i]) for i in valid], np.int32)
+        sims, nbrs = jax.device_get(self._probe_topk(
+            self.state, jnp.asarray(self._pad_bucket(uvec)), k_eff))
+        B = len(uvec)
+        sims, nbrs = sims[:B], nbrs[:B]
+
+        keys = np.concatenate([sims.view(np.uint32), nbrs.view(np.uint32),
+                               ivec.reshape(-1, 1).view(np.uint32)], axis=1)
+        plan = dedup_rows(keys)
+        sel = self._pad_bucket(plan.unique_rows)
+        preds = jax.device_get(self._score_pred(
+            self.state, jnp.asarray(sims[sel]), jnp.asarray(nbrs[sel]),
+            jnp.asarray(ivec[sel])))
+
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        for pos, i in enumerate(valid):
+            results[i] = float(preds[int(plan.scatter[pos])])
+        self._note_query_batch(B, plan.n_unique, plan.savings, dt_ms,
+                               degraded=k_eff != int(k))
+        return results
+
+    def recommend(self, user: int, n: int = 10,
+                  k_neighbors: int = 20) -> list[tuple[int, float]]:
+        """Thin B=1 wrapper over ``recommend_batch`` (one device
+        dispatch, one host transfer — no per-element sync)."""
+        return self.recommend_batch([user], n=n, k_neighbors=k_neighbors)[0]
 
     def predict(self, user: int, item: int, k: int = 20) -> float:
-        if guard.validate_user_id(user, int(self.state.n_active)):
-            self._reject("predict", guard.R_USER_ID, user)
-            return 0.0
-        if guard.validate_item_id(item, self.state.n_items):
-            self._reject("predict", guard.R_ITEM_ID, item)
-            return 0.0
-        if self.replicas is not None:
-            self._replication_tick()
-            self._state_ok()
-        return float(self._predict(self.state, jnp.int32(user),
-                                   jnp.int32(item), k=k))
+        """Thin B=1 wrapper over ``predict_batch``."""
+        return self.predict_batch([user], [item], k=k)[0]
 
     # -- maintenance --------------------------------------------------------
 

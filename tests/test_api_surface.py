@@ -23,8 +23,9 @@ EXPECTED_ALL = {
     "Quarantine", "Rejection", "RetryPolicy", "call_with_retry",
     # durability
     "WalRecord", "WriteAheadLog",
-    # LM-serving utilities
-    "DedupPlan", "dedup_batch", "fan_out", "prompt_hash", "LMServer",
+    # twin-dedup utilities (LM prompts + CF query batches)
+    "DedupPlan", "dedup_batch", "dedup_rows", "fan_out", "prompt_hash",
+    "LMServer",
 }
 
 SERVER_CONFIG_FIELDS = {
@@ -75,6 +76,30 @@ class TestServingSurface:
             cfg.capacity_extra = 1
         with pytest.raises(dataclasses.FrozenInstanceError):
             cfg.wal.fsync = False
+
+    def test_query_endpoints(self):
+        for name in ("recommend", "predict", "recommend_batch",
+                     "predict_batch"):
+            assert callable(getattr(serving.CFServer, name)), name
+
+    def test_server_stats_query_fields(self):
+        got = {f.name for f in dataclasses.fields(serving.ServerStats)}
+        assert {"queries", "query_batches", "query_unique",
+                "query_degraded"} <= got
+        summary = serving.ServerStats().summary()
+        for key in ("queries", "query_batches", "query_unique",
+                    "query_degraded", "query_p50_ms", "query_p99_ms",
+                    "query_dedup_savings"):
+            assert key in summary, key
+
+    def test_batch_query_exports(self):
+        import repro.core as core
+        import repro.kernels as kernels
+        for name in ("predict_batch", "recommend_batch",
+                     "top_k_neighbors_batch"):
+            assert callable(getattr(core.knn, name)), name
+        for name in ("knn_scores", "knn_recommend_topn"):
+            assert callable(getattr(kernels, name)), name
 
     def test_result_legacy_shapes(self):
         res = serving.OnboardResult(user_id=7, status="ok", twin_found=True,

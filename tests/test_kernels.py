@@ -6,9 +6,11 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.kernels import (cosine_similarity, embedding_bag, merge_insert,
-                           twin_probe, verify_rows)
+from repro.kernels import (cosine_similarity, embedding_bag, knn_scores,
+                           knn_recommend_topn, merge_insert, twin_probe,
+                           verify_rows)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.knn_score.ref import knn_scores_ref
 from repro.kernels.list_merge.ref import merge_insert_ref
 from repro.kernels.similarity.ref import similarity_ref
 from repro.kernels.twin_probe.ref import twin_probe_ref
@@ -123,6 +125,59 @@ def test_merge_insert_equals_sequential(use_pallas):
                                 use_pallas=use_pallas)
     assert np.array_equal(np.asarray(out_v), seq_v.astype(np.float32))
     assert np.array_equal(np.asarray(out_i), seq_i)
+
+
+def _knn_case(rng, B, k, N, m):
+    """Sparse ratings + clamped weights with dead (zero-weight) slots."""
+    R = (rng.integers(1, 6, (N, m)) * (rng.random((N, m)) < 0.3)
+         ).astype(np.float32)
+    w = np.maximum(rng.normal(size=(B, k)), 0.0).astype(np.float32)
+    nbrs = rng.integers(0, N, (B, k)).astype(np.int32)
+    users = rng.integers(0, N, B).astype(np.int32)
+    return (jnp.asarray(R), jnp.asarray(w), jnp.asarray(nbrs),
+            jnp.asarray(users))
+
+
+@pytest.mark.parametrize("B,k,N,m", [(4, 5, 30, 17), (16, 10, 120, 50),
+                                     (1, 20, 64, 130), (7, 3, 50, 512),
+                                     (13, 1, 16, 600)])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_knn_scores_sweep(B, k, N, m, use_pallas):
+    """Both backends (scan fast path / interpret-mode Pallas) are
+    bit-exact against the einsum oracle."""
+    rng = np.random.default_rng(B * 1000 + k * 100 + N + m)
+    R, w, nbrs, users = _knn_case(rng, B, k, N, m)
+    out = knn_scores(R, w, nbrs, users, use_pallas=use_pallas)
+    ref = knn_scores_ref(R, w, nbrs, users)
+    assert np.asarray(out).tobytes() == np.asarray(ref).tobytes()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_knn_scores_zero_weight_slot_is_noop(use_pallas):
+    """A weight-0 slot (SENTINEL/padded neighbour after clamping) must
+    not perturb scores no matter which row it points at."""
+    rng = np.random.default_rng(99)
+    R, w, nbrs, users = _knn_case(rng, 6, 4, 40, 33)
+    w = w.at[:, 2].set(0.0)
+    a = knn_scores(R, w, nbrs, users, use_pallas=use_pallas)
+    b = knn_scores(R, w, nbrs.at[:, 2].set(0), users,
+                   use_pallas=use_pallas)
+    assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_knn_recommend_topn_masks_seen(use_pallas):
+    rng = np.random.default_rng(5)
+    R, w, nbrs, users = _knn_case(rng, 5, 6, 30, 24)
+    scores, items = knn_recommend_topn(R, w, nbrs, users, n_rec=7,
+                                       use_pallas=use_pallas)
+    ref = np.asarray(knn_scores_ref(R, w, nbrs, users))
+    Rn, un = np.asarray(R), np.asarray(users)
+    for b in range(5):
+        order = np.argsort(-ref[b], kind="stable")[:7]
+        assert np.array_equal(np.asarray(scores[b]), ref[b][order])
+        finite = np.isfinite(np.asarray(scores[b]))
+        assert np.all(Rn[un[b], np.asarray(items[b])[finite]] == 0)
 
 
 @settings(max_examples=15, deadline=None)
